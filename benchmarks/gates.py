@@ -1,0 +1,56 @@
+"""Paper Figs 7a/7b (Neon), 8b (AVX2), 9b (AVX512): MAC gate counts vs
+precision, per cell library, per rounding mode — plus our TPU-VPU
+library.  The paper's claim that synthesis area tracks software op count
+(and hence throughput) is checked against the macs.py measurements.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core.fpcore import build_mac
+from repro.core.fpformat import HOBFLOPS_FORMATS, RNE, RTZ
+from repro.core.opt import CELL_LIBS, tech_map
+
+LIBS = ("avx2", "neon", "avx512", "tpu_vpu")
+FORMATS = ["hobflops8", "hobflops9", "hobflops10", "hobflops11",
+           "hobflops12", "hobflops13", "hobflops14", "hobflops15",
+           "hobflops16", "hobflops_ieee8"]
+
+
+def gate_table(extended: bool = False, roundings=(RNE, RTZ),
+               formats=FORMATS):
+    rows = []
+    for name in formats:
+        fmt = HOBFLOPS_FORMATS[name]
+        for rounding in roundings:
+            t0 = time.time()
+            g = build_mac(fmt, extended=extended, rounding=rounding)
+            row = {"format": name + ("e" if extended else ""),
+                   "rounding": rounding,
+                   "raw_gates": g.live_gate_count(),
+                   "depth": g.depth(),
+                   "build_s": round(time.time() - t0, 2)}
+            for lib in LIBS:
+                mapped = tech_map(g, CELL_LIBS[lib]())
+                row[lib] = mapped.live_gate_count()
+            rows.append(row)
+    return rows
+
+
+def run(quick: bool = False):
+    formats = (["hobflops8", "hobflops9", "hobflops16"] if quick
+               else FORMATS)
+    rows = gate_table(formats=formats)
+    rows += gate_table(extended=True, roundings=(RNE,),
+                       formats=["hobflops8", "hobflops9", "hobflops16"])
+    out = ["format,rounding,raw,avx2,neon,avx512,tpu_vpu,depth"]
+    for r in rows:
+        out.append(f"{r['format']},{r['rounding']},{r['raw_gates']},"
+                   f"{r['avx2']},{r['neon']},{r['avx512']},"
+                   f"{r['tpu_vpu']},{r['depth']}")
+    return "\n".join(out), rows
+
+
+if __name__ == "__main__":
+    text, _ = run()
+    print(text)

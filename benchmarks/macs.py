@@ -1,0 +1,121 @@
+"""Paper Figs 6/8a/9a: MACs/second — HOBFLOPS bitslice-parallel vs
+SoftFP-style word-parallel emulation vs native float.
+
+The paper's machines are Neon/AVX2/AVX512 CPUs; here both contenders
+are XLA-compiled on the host CPU backend, which preserves the paper's
+*comparison* (bitslice-parallel vs integer-word emulation of the same
+custom format) while the TPU numbers come from the §Roofline dry-run.
+Inputs are pre-transformed (codes / bit planes), matching the paper's
+"IFM and Kernel data pre-transformed to HOBFLOPS" methodology.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import softfloat as sf
+from repro.core.bitslice import pack_planes
+from repro.core.fpformat import HOBFLOPS_FORMATS, RNE, RTZ, FPFormat
+from repro.kernels.bitslice_mac.ops import _bitslice_mac_jnp, encode_inputs
+
+# Workload: P output pixels x C channels x M kernels (paper Fig. 5).
+P_, C_, M_ = 16, 32, 512
+
+
+def _time(fn, *args, iters=3):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters
+
+
+def bench_bitslice(fmt: FPFormat, rounding: str = RNE,
+                   extended: bool = False):
+    rng = np.random.default_rng(0)
+    i = rng.standard_normal((P_, C_)).astype(np.float32)
+    w = rng.standard_normal((C_, M_)).astype(np.float32)
+    i_masks, w_planes = encode_inputs(i, w, fmt, rounding,
+                                      p_block=P_, m_block=M_ // 32,
+                                      c_block=C_)
+    fn = jax.jit(lambda a, b: _bitslice_mac_jnp(
+        a, b, fmt=fmt, extended=extended, rounding=rounding))
+    dt = _time(fn, i_masks, w_planes)
+    return (P_ * C_ * M_) / dt, dt
+
+
+def bench_softfp(fmt: FPFormat, rounding: str = RNE,
+                 extended: bool = False):
+    """Word-parallel integer-op FP emulation (the SoftFP analogue) over
+    the same MAC count."""
+    rng = np.random.default_rng(0)
+    fmt_out = fmt.mult_out(extended)
+    ic = sf.encode(rng.standard_normal((P_, C_)), fmt)
+    wc = sf.encode(rng.standard_normal((C_, M_)), fmt)
+    icj = jnp.asarray(ic, jnp.int32)
+    wcj = jnp.asarray(wc, jnp.int32)
+
+    def mac_all(i_codes, w_codes):
+        acc0 = jnp.zeros((P_, M_), jnp.int32)
+
+        def step(acc, cw):
+            col, wrow = cw
+            x = jnp.broadcast_to(col[:, None], (P_, M_))
+            y = jnp.broadcast_to(wrow[None, :], (P_, M_))
+            return sf.fp_mac(x, y, acc, fmt, fmt_out, rounding, jnp), None
+
+        acc, _ = jax.lax.scan(step, acc0,
+                              (jnp.moveaxis(i_codes, 1, 0), w_codes))
+        return acc
+
+    fn = jax.jit(mac_all)
+    dt = _time(fn, icj, wcj)
+    return (P_ * C_ * M_) / dt, dt
+
+
+def bench_native_f32():
+    rng = np.random.default_rng(0)
+    i = jnp.asarray(rng.standard_normal((P_, C_)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((C_, M_)), jnp.float32)
+    fn = jax.jit(lambda a, b: a @ b)
+    dt = _time(fn, i, w)
+    return (P_ * C_ * M_) / dt, dt
+
+
+FORMATS_FULL = ["hobflops8", "hobflops9", "hobflops10", "hobflops11",
+                "hobflops12", "hobflops14", "hobflops16"]
+
+
+def run(quick: bool = False):
+    formats = ["hobflops8", "hobflops9", "hobflops16"] if quick \
+        else FORMATS_FULL
+    rows = ["impl,format,rounding,macs_per_s,us_per_call"]
+    f32_rate, f32_dt = bench_native_f32()
+    rows.append(f"native_f32,f32,-,{f32_rate:.3e},{f32_dt*1e6:.1f}")
+    sf_rate, sf_dt = bench_softfp(HOBFLOPS_FORMATS["hobflops16"])
+    rows.append(f"softfp_word,hobflops16,rne,{sf_rate:.3e},"
+                f"{sf_dt*1e6:.1f}")
+    results = {"softfp16": sf_rate, "f32": f32_rate}
+    for name in formats:
+        for rounding in ((RNE,) if quick else (RNE, RTZ)):
+            rate, dt = bench_bitslice(HOBFLOPS_FORMATS[name], rounding)
+            rows.append(f"hobflops_bitslice,{name},{rounding},"
+                        f"{rate:.3e},{dt*1e6:.1f}")
+            results[(name, rounding)] = rate
+    for name in (["hobflops9"] if quick else ["hobflops8", "hobflops9",
+                                              "hobflops16"]):
+        rate, dt = bench_bitslice(HOBFLOPS_FORMATS[name], RNE,
+                                  extended=True)
+        rows.append(f"hobflops_bitslice,{name}e,rne,{rate:.3e},"
+                    f"{dt*1e6:.1f}")
+    return "\n".join(rows), results
+
+
+if __name__ == "__main__":
+    text, _ = run()
+    print(text)

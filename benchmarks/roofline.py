@@ -1,0 +1,112 @@
+"""§Roofline: assemble the per-cell roofline table from the dry-run
+JSONs (experiments/dryrun/*.json) produced by repro.launch.dryrun.
+
+Adds the MODEL_FLOPS = 6·N·D analytical term (N = active params for
+MoE) and the usefulness ratio MODEL_FLOPS / HLO_FLOPs that catches
+remat/replication waste.  Numbers are per chip (the compiled module is
+post-SPMD); MODEL_FLOPS is divided by the device count accordingly.
+"""
+from __future__ import annotations
+
+import json
+import math
+import pathlib
+
+import jax
+
+from repro.configs import get_config
+from repro.models import model_schema
+from repro.models.config import SHAPES
+from repro.models.schema import P as SchemaP
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+
+def active_param_count(cfg) -> int:
+    """Parameters touched per token: experts scaled by top_k/E."""
+    schema = model_schema(cfg)
+    total = 0
+
+    def walk(tree, in_moe):
+        nonlocal total
+        if isinstance(tree, dict):
+            for k, v in tree.items():
+                walk(v, in_moe or k == "moe")
+        elif isinstance(tree, SchemaP):
+            n = math.prod(tree.shape)
+            if in_moe and cfg.moe_experts:
+                n = n * cfg.moe_top_k // cfg.moe_experts
+            total += n
+    walk(schema, False)
+    return total
+
+
+def model_flops(cfg, shape, kind: str) -> float:
+    n = active_param_count(cfg)
+    if kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence per step
+    return 2.0 * n * shape.global_batch
+
+
+def load_cells(dryrun_dir="experiments/dryrun"):
+    cells = []
+    for p in sorted(pathlib.Path(dryrun_dir).glob("*.json")):
+        rec = json.loads(p.read_text())
+        cells.append(rec)
+    return cells
+
+
+def table(dryrun_dir="experiments/dryrun", mesh: str | None = "single"):
+    rows = []
+    header = ("| arch | shape | mesh | compute_s | memory_s | coll_s | "
+              "dominant | model_flops/hlo | fits_hbm | note |")
+    rows.append(header)
+    rows.append("|" + "---|" * 10)
+    for rec in load_cells(dryrun_dir):
+        if mesh and rec.get("mesh") != mesh:
+            continue
+        if rec.get("status") == "skip":
+            rows.append(f"| {rec['arch']} | {rec['shape']} | {rec['mesh']}"
+                        f" | — | — | — | skip | — | — | "
+                        f"{rec['reason'][:60]} |")
+            continue
+        if rec.get("status") != "ok":
+            rows.append(f"| {rec['arch']} | {rec['shape']} | {rec['mesh']}"
+                        f" | — | — | — | ERROR | — | — | "
+                        f"{rec.get('error', '')[:60]} |")
+            continue
+        cfg = get_config(rec["arch"])
+        shape = SHAPES[rec["shape"]]
+        mf = model_flops(cfg, shape, rec["kind"]) / rec["n_devices"]
+        hlo = rec["hlo_cost"]["flops"]
+        r = rec["roofline"]
+        temp = rec["memory_analysis"].get("temp_size_in_bytes", 0)
+        args = rec["memory_analysis"].get("argument_size_in_bytes", 0)
+        fits = (temp + args) <= 16 * 2 ** 30
+        rows.append(
+            f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} "
+            f"| {r['compute_s']:.4f} | {r['memory_s']:.4f} "
+            f"| {r['collective_s']:.4f} | {r['dominant']} "
+            f"| {mf / max(hlo, 1):.3f} | {'Y' if fits else 'N'} "
+            f"| temp={temp / 2**30:.1f}GiB |")
+    return "\n".join(rows)
+
+
+def run(quick: bool = False):
+    t = table()
+    cells = [c for c in load_cells() if c.get("status") == "ok"]
+    n_ok = len(cells)
+    n_skip = sum(1 for c in load_cells() if c.get("status") == "skip")
+    summary = f"roofline_cells_ok,{n_ok},skip={n_skip}"
+    return t + "\n" + summary, {"ok": n_ok, "skip": n_skip}
+
+
+if __name__ == "__main__":
+    print(run()[0])

@@ -1,0 +1,52 @@
+"""Benchmark runner: one section per paper table/figure.
+
+  gates      — MAC gate counts per cell library (paper Figs 7, 8b, 9b)
+  macs       — MACs/s bitslice vs SoftFP word emulation (Figs 6, 8a, 9a)
+  conv       — CNN convolution layer in HOBFLOPS (paper §3.4/§4)
+  roofline   — assembled dry-run roofline table (§Roofline), if
+               experiments/dryrun has been populated
+
+Prints ``name,us_per_call,derived`` CSV blocks per section.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small format subset (CI-speed)")
+    ap.add_argument("--only", default=None,
+                    help="comma list: gates,macs,conv,roofline")
+    args = ap.parse_args(argv)
+    only = set(args.only.split(",")) if args.only else None
+    sections = [s for s in ("gates", "macs", "conv", "roofline")
+                if only is None or s in only]
+
+    for sec in sections:
+        t0 = time.time()
+        print(f"== {sec} ==", flush=True)
+        try:
+            if sec == "gates":
+                from benchmarks import gates
+                text, _ = gates.run(quick=args.quick)
+            elif sec == "macs":
+                from benchmarks import macs
+                text, _ = macs.run(quick=args.quick)
+            elif sec == "conv":
+                from benchmarks import conv_layer
+                text, _ = conv_layer.run(quick=args.quick)
+            else:
+                from benchmarks import roofline
+                text, _ = roofline.run(quick=args.quick)
+            print(text, flush=True)
+        except Exception as e:  # keep the harness going
+            print(f"SECTION-ERROR {sec}: {type(e).__name__}: {e}",
+                  flush=True)
+        print(f"== {sec} done in {time.time()-t0:.1f}s ==\n", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""End-to-end driver (the paper is an inference paper): serve a small
+LM with batched requests, weights stored as HOBFLOPS9 bitplane codes —
+the paper's custom-precision FP as the memory-bandwidth feature of
+decode.  Compares output agreement and HBM weight footprint vs bf16.
+
+Run: PYTHONPATH=src python examples/serve_quantized.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.launch.serve import serve_demo
+from repro.models import model_schema
+from repro.models.schema import init_params
+from repro.quant.apply import quantize_params, quantized_bytes
+
+
+def main():
+    cfg = smoke_config("qwen3-4b")
+    print(f"arch: {cfg.name} ({cfg.n_layers}L d={cfg.d_model})")
+
+    params = init_params(model_schema(cfg), jax.random.PRNGKey(0))
+    qp, _ = quantize_params(params, cfg, "hobflops9")
+    qb, db = quantized_bytes(qp)
+    print(f"quantized weight families: {qb/1e6:.2f} MB as hobflops9 "
+          f"bitplanes vs {db/1e6:.2f} MB as bf16 "
+          f"({db/max(qb,1):.2f}x smaller)\n")
+
+    print("--- serving with bf16 weights ---")
+    toks_f = serve_demo(cfg, batch=4, prompt_len=32, gen_len=12)
+    print("\n--- serving with hobflops9 bitplane weights ---")
+    toks_q = serve_demo(cfg, batch=4, prompt_len=32, gen_len=12,
+                        quant="hobflops9")
+    agree = (toks_f == toks_q).mean()
+    print(f"\ngreedy token agreement f32 vs hobflops9: {agree:.2%} "
+          f"(9-bit weights on an untrained model)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Hillclimb batch: grok-1-314b train_4k (worst roofline fraction) and
+olmoe-1b-7b train_4k (most collective-bound), single-pod.
+
+Hypotheses (per EXPERIMENTS.md §Perf):
+  grok  H1: per-microbatch passes dominate weight traffic; n_micro 8->2
+            cuts re-reads/gathers ~4x while SP keeps activations inside
+            HBM.
+  grok  H2: expert capacity 1.25->1.0 trims the padded [E, C, d]
+            dispatch pipeline ~20% (memory AND the TP psum bytes).
+  olmoe H1: n_micro 4->1 (tiny model: activations fit) removes 3/4 of
+            per-microbatch weight+dispatch traffic.
+  olmoe H2: capacity 1.25->1.0, same reasoning as grok H2.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+from repro.launch.dryrun import run_cell
+
+OUT = "experiments/perf"
+
+# corrected-analyzer baselines
+run_cell("grok-1-314b", "train_4k", "single", OUT, tag="_base")
+run_cell("olmoe-1b-7b", "train_4k", "single", OUT, tag="_base")
+
+# grok variants
+run_cell("grok-1-314b", "train_4k", "single", OUT,
+         overrides={"n_micro": 2}, tag="_micro2")
+run_cell("grok-1-314b", "train_4k", "single", OUT,
+         overrides={"n_micro": 2,
+                    "cfg_replace": {"moe_capacity_factor": 1.0}},
+         tag="_micro2_cap1")
+
+# olmoe variants
+run_cell("olmoe-1b-7b", "train_4k", "single", OUT,
+         overrides={"n_micro": 1}, tag="_micro1")
+run_cell("olmoe-1b-7b", "train_4k", "single", OUT,
+         overrides={"n_micro": 1,
+                    "cfg_replace": {"moe_capacity_factor": 1.0}},
+         tag="_micro1_cap1")

@@ -1,0 +1,67 @@
+"""Dev script: exhaustive circuit-vs-oracle check for small formats."""
+import sys
+import numpy as np
+
+sys.path.insert(0, "/root/repo/src")
+
+from repro.core import softfloat as sf
+from repro.core.bitslice import pack_planes_np, unpack_planes_np
+from repro.core.codegen import eval_netlist
+from repro.core.fpcore import build_add, build_mul
+from repro.core.fpformat import (EXC_INF, EXC_NAN, EXC_NORMAL, EXC_ZERO, RNE,
+                                 RTZ, FPFormat)
+
+
+def all_canonical_codes(fmt):
+    codes = []
+    for exc, signs in ((EXC_ZERO, (0, 1)), (EXC_INF, (0, 1)), (EXC_NAN, (0,))):
+        for s in signs:
+            codes.append(sf.pack(exc, s, 0, 0, fmt))
+    n_norm = 2 * (1 << fmt.w_e) * (1 << fmt.w_f)
+    sign = np.repeat([0, 1], n_norm // 2)
+    exp = np.tile(np.repeat(np.arange(1 << fmt.w_e), 1 << fmt.w_f), 2)
+    frac = np.tile(np.arange(1 << fmt.w_f), 2 * (1 << fmt.w_e))
+    codes.extend(sf.pack(np.full(n_norm, EXC_NORMAL), sign, exp, frac, fmt))
+    return np.array(codes, dtype=np.int64)
+
+
+def check(fmt_in, fmt_out, rounding, op):
+    xs = all_canonical_codes(fmt_in)
+    pairs_x = np.repeat(xs, len(xs))
+    pairs_y = np.tile(xs, len(xs))
+    if op == "mul":
+        expect = sf.fp_mul(pairs_x, pairs_y, fmt_in, fmt_out, rounding)
+        g = build_mul(fmt_in, fmt_out, rounding)
+    else:
+        expect = sf.fp_add(pairs_x, pairs_y, fmt_in, rounding)
+        g = build_add(fmt_in, rounding)
+    planes_x = pack_planes_np(pairs_x, fmt_in.nbits)
+    planes_y = pack_planes_np(pairs_y, fmt_in.nbits)
+    out = eval_netlist(g, {"x": planes_x, "y": planes_y})["out"]
+    got = unpack_planes_np(out, len(pairs_x))
+    bad = got != expect
+    print(f"{op} {fmt_in}->{fmt_out} {rounding}: {len(pairs_x)} pairs, "
+          f"{bad.sum()} mismatches, gates={g.live_gate_count()} "
+          f"depth={g.depth()}")
+    if bad.any():
+        idx = np.nonzero(bad)[0][:10]
+        for i in idx:
+            print(f"  x={pairs_x[i]:x} ({sf.decode(pairs_x[i], fmt_in)}) "
+                  f"y={pairs_y[i]:x} ({sf.decode(pairs_y[i], fmt_in)}) "
+                  f"got={got[i]:x} ({sf.decode(got[i], fmt_out)}) "
+                  f"want={expect[i]:x} ({sf.decode(expect[i], fmt_out)})")
+        return False
+    return True
+
+
+if __name__ == "__main__":
+    ok = True
+    f32 = FPFormat(3, 2)
+    ok &= check(f32, f32.mult_out(), RNE, "mul")
+    ok &= check(f32, f32.mult_out(True), RNE, "mul")
+    ok &= check(f32, f32.mult_out(), RTZ, "mul")
+    ok &= check(FPFormat(3, 3), FPFormat(3, 3), RNE, "add")
+    ok &= check(FPFormat(3, 3), FPFormat(3, 3), RTZ, "add")
+    ok &= check(FPFormat(4, 2), FPFormat(4, 2), RNE, "add")
+    print("ALL OK" if ok else "FAILURES")
+    sys.exit(0 if ok else 1)

@@ -1,0 +1,224 @@
+"""Sharded, elastic, async checkpointing.
+
+Every array is saved as one .npy chunk per *unique* shard (replica 0
+only), keyed by the global index bounds of the shard, plus a manifest
+with shapes, dtypes, chunk tables and crc32 integrity hashes.  Restore
+is layout-free: ``jax.make_array_from_callback`` asks for whatever
+slices the *current* mesh needs and the reader assembles them from any
+overlapping chunks — so a checkpoint written on (16,16) restores onto
+(2,16,16), (4,8), or one CPU device (elastic re-mesh / shrink restart).
+
+Commit protocol: chunks are written into ``step_<n>.tmp/`` and the
+directory is atomically renamed to ``step_<n>/`` after the manifest
+lands — a crashed writer can never produce a half-valid checkpoint.
+``CheckpointManager`` runs saves on a background thread (device->host
+transfer is synchronous, file IO is async) and ``wait()`` barriers at
+the next save/restore.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+import re
+import shutil
+import threading
+import zlib
+
+import jax
+import numpy as np
+
+
+def _leaf_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names = ["/".join(_key_str(k) for k in path) for path, _ in flat]
+    leaves = [leaf for _, leaf in flat]
+    return names, leaves, treedef
+
+
+def _key_str(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    return str(k)
+
+
+def _chunk_name(name: str, start: tuple, stop: tuple) -> str:
+    safe = re.sub(r"[^A-Za-z0-9_.-]", "_", name)
+    idx = "_".join(f"{a}-{b}" for a, b in zip(start, stop))
+    return f"{safe}__{idx or 'scalar'}.npy"
+
+
+def save_checkpoint(directory, step: int, state, *, keep: int = 3):
+    """Synchronous sharded save.  Returns the checkpoint path."""
+    directory = pathlib.Path(directory)
+    tmp = directory / f"step_{step}.tmp"
+    final = directory / f"step_{step}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+
+    names, leaves, _ = _leaf_paths(state)
+    manifest = {"step": step, "leaves": {}}
+    for name, leaf in zip(names, leaves):
+        arr = leaf if isinstance(leaf, jax.Array) else jax.numpy.asarray(leaf)
+        chunks = []
+        for shard in arr.addressable_shards:
+            if shard.replica_id != 0:
+                continue
+            idx = shard.index
+            start = tuple(s.start or 0 for s in idx)
+            stop = tuple(s.stop if s.stop is not None else dim
+                         for s, dim in zip(idx, arr.shape))
+            data = np.ascontiguousarray(np.asarray(shard.data))
+            fname = _chunk_name(name, start, stop)
+            # Store raw little-endian bytes: numpy can't round-trip
+            # ml_dtypes (bfloat16) through np.save/np.load natively.
+            np.save(tmp / fname, data.reshape(-1).view(np.uint8))
+            chunks.append({"file": fname, "start": list(start),
+                           "stop": list(stop),
+                           "shape": [b - a for a, b in zip(start, stop)],
+                           "dtype": str(data.dtype),
+                           "crc32": zlib.crc32(data.tobytes()) & 0xFFFFFFFF})
+        manifest["leaves"][name] = {
+            "shape": list(arr.shape),
+            "dtype": str(arr.dtype),
+            "chunks": chunks,
+        }
+    (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)
+    _gc(directory, keep)
+    return final
+
+
+def _gc(directory: pathlib.Path, keep: int):
+    steps = sorted(
+        (int(p.name.split("_")[1]), p)
+        for p in directory.glob("step_*") if p.name.split("_")[1].isdigit())
+    for _, p in steps[:-keep] if keep else []:
+        shutil.rmtree(p, ignore_errors=True)
+
+
+def latest_step(directory) -> int | None:
+    directory = pathlib.Path(directory)
+    if not directory.exists():
+        return None
+    steps = [int(p.name.split("_")[1]) for p in directory.glob("step_*")
+             if p.name.split("_")[1].isdigit()
+             and (p / "manifest.json").exists()]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory, step: int, abstract_state,
+                       shardings=None, *, verify: bool = False):
+    """Restore onto the current mesh.  ``abstract_state`` is a pytree of
+    ShapeDtypeStructs (or arrays — shapes/dtypes are taken from it);
+    ``shardings`` is a matching tree of Shardings (None -> host+commit
+    to default device placement)."""
+    ckpt = pathlib.Path(directory) / f"step_{step}"
+    manifest = json.loads((ckpt / "manifest.json").read_text())
+
+    names, leaves, treedef = _leaf_paths(abstract_state)
+    if shardings is not None:
+        _, sh_leaves, _ = _leaf_paths(shardings)
+    else:
+        sh_leaves = [None] * len(leaves)
+
+    out = []
+    for name, leaf, sh in zip(names, leaves, sh_leaves):
+        meta = manifest["leaves"][name]
+        shape = tuple(meta["shape"])
+        dtype = np.dtype(meta["dtype"])
+        want_shape = tuple(getattr(leaf, "shape", shape))
+        assert want_shape == shape, (name, want_shape, shape)
+        chunks = meta["chunks"]
+
+        def read_slice(index, _chunks=chunks, _shape=shape, _dtype=dtype,
+                       _dir=ckpt, _verify=verify):
+            starts = tuple(s.start or 0 for s in index)
+            stops = tuple(s.stop if s.stop is not None else dim
+                          for s, dim in zip(index, _shape))
+            out_arr = np.empty([b - a for a, b in zip(starts, stops)],
+                               _dtype)
+            for ch in _chunks:
+                c0, c1 = ch["start"], ch["stop"]
+                inter0 = [max(a, c) for a, c in zip(starts, c0)]
+                inter1 = [min(b, c) for b, c in zip(stops, c1)]
+                if any(a >= b for a, b in zip(inter0, inter1)) and out_arr.ndim:
+                    continue
+                raw = np.load(_dir / ch["file"])
+                if _verify:
+                    crc = zlib.crc32(raw.tobytes()) & 0xFFFFFFFF
+                    if crc != ch["crc32"]:
+                        raise IOError(f"checksum mismatch in {ch['file']}")
+                import jax.numpy as _jnp
+                ch_dtype = _jnp.dtype(ch.get("dtype", str(_dtype)))
+                data = raw.view(ch_dtype).reshape(ch["shape"])
+                if not out_arr.ndim:
+                    out_arr[()] = data[()]
+                    continue
+                src = tuple(slice(a - c, b - c)
+                            for a, b, c in zip(inter0, inter1, c0))
+                dst = tuple(slice(a - s, b - s)
+                            for a, b, s in zip(inter0, inter1, starts))
+                out_arr[dst] = data[src]
+            return out_arr
+
+        target_dtype = getattr(leaf, "dtype", dtype)
+        if sh is None:
+            full = read_slice(tuple(slice(0, d) for d in shape))
+            out.append(jax.numpy.asarray(full.astype(target_dtype)))
+        else:
+            arr = jax.make_array_from_callback(
+                shape, sh,
+                lambda idx, rs=read_slice, td=target_dtype:
+                    rs(idx).astype(td))
+            out.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+@dataclasses.dataclass
+class CheckpointManager:
+    """Async checkpointing with a single background writer thread."""
+    directory: str
+    keep: int = 3
+    _thread: threading.Thread | None = None
+    _error: list = dataclasses.field(default_factory=list)
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error:
+            raise self._error.pop()
+
+    def save(self, step: int, state, *, block: bool = False):
+        self.wait()
+        # Materialize on host synchronously (cheap, local) so the step
+        # can mutate `state` immediately; file IO happens off-thread.
+        host_state = jax.tree.map(
+            lambda x: np.asarray(jax.device_get(x)), state)
+
+        def work():
+            try:
+                save_checkpoint(self.directory, step, host_state,
+                                keep=self.keep)
+            except Exception as e:  # surfaced at next wait()
+                self._error.append(e)
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+        if block:
+            self.wait()
+
+    def restore_latest(self, abstract_state, shardings=None):
+        self.wait()
+        step = latest_step(self.directory)
+        if step is None:
+            return None, None
+        state = restore_checkpoint(self.directory, step, abstract_state,
+                                   shardings)
+        return step, state

@@ -1,0 +1,84 @@
+"""Bitslice (bit-plane) transforms: code words <-> bit planes.
+
+The bitslice layout (paper Fig. 3a) stores N custom-FP code words as
+``nbits`` planes; plane ``b``, lane-word ``w`` holds bit ``b`` of codes
+``w*L .. w*L+L-1`` packed into one machine word of L lanes.  On TPU we
+use int32 lane words (the VPU's native element width); the *effective*
+SIMD width is whatever array of lane words we process at once — each
+(8, 128) vreg of int32 planes is 32768 parallel 1-bit lanes.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+try:
+    import jax.numpy as jnp
+except ImportError:  # pragma: no cover
+    jnp = None
+
+
+# ---------------------------------------------------------------------------
+# numpy host-side transforms (uint64 lane words; testing + data prep)
+# ---------------------------------------------------------------------------
+def pack_planes_np(codes: np.ndarray, nbits: int,
+                   lane_bits: int = 64) -> np.ndarray:
+    """[N] int codes -> [nbits, ceil(N/lane_bits)] uint64 bit planes."""
+    codes = np.asarray(codes, dtype=np.uint64).ravel()
+    n = codes.shape[0]
+    nwords = -(-n // lane_bits)
+    padded = np.zeros(nwords * lane_bits, dtype=np.uint64)
+    padded[:n] = codes
+    padded = padded.reshape(nwords, lane_bits)
+    weights = (np.uint64(1) << np.arange(lane_bits, dtype=np.uint64))
+    planes = np.empty((nbits, nwords), dtype=np.uint64)
+    for b in range(nbits):
+        bits = (padded >> np.uint64(b)) & np.uint64(1)
+        planes[b] = (bits * weights).sum(axis=1, dtype=np.uint64)
+    return planes
+
+
+def unpack_planes_np(planes: np.ndarray, n: int,
+                     lane_bits: int = 64) -> np.ndarray:
+    """[nbits, W] planes -> [n] int64 codes."""
+    nbits, nwords = planes.shape
+    codes = np.zeros(nwords * lane_bits, dtype=np.int64)
+    for b in range(nbits):
+        bits = (planes[b][:, None].astype(np.uint64)
+                >> np.arange(lane_bits, dtype=np.uint64)) & np.uint64(1)
+        codes |= bits.astype(np.int64).ravel() << b
+    return codes[:n]
+
+
+# ---------------------------------------------------------------------------
+# jnp transforms (int32 lane words; TPU data path)
+# ---------------------------------------------------------------------------
+def pack_planes(codes, nbits: int, lane_bits: int = 32):
+    """[..., N] int32 codes -> [nbits, ..., N // lane_bits] int32 planes.
+
+    N must be a multiple of lane_bits.  Uses a matmul-free bit-gather so
+    it lowers to pure vector ops on TPU.
+    """
+    assert jnp is not None
+    codes = jnp.asarray(codes, dtype=jnp.int32)
+    n = codes.shape[-1]
+    assert n % lane_bits == 0, f"lane dim {n} % {lane_bits} != 0"
+    grouped = codes.reshape(*codes.shape[:-1], n // lane_bits, lane_bits)
+    weights = (jnp.int32(1) << jnp.arange(lane_bits, dtype=jnp.int32))
+    planes = []
+    for b in range(nbits):
+        bits = (grouped >> b) & 1
+        planes.append((bits * weights).sum(axis=-1).astype(jnp.int32))
+    return jnp.stack(planes, axis=0)
+
+
+def unpack_planes(planes, lane_bits: int = 32):
+    """[nbits, ..., W] int32 planes -> [..., W * lane_bits] int32 codes."""
+    assert jnp is not None
+    nbits = planes.shape[0]
+    shifts = jnp.arange(lane_bits, dtype=jnp.int32)
+    codes = None
+    for b in range(nbits):
+        bits = (jnp.right_shift(planes[b][..., None], shifts) & 1)
+        term = bits.astype(jnp.int32) << b
+        codes = term if codes is None else codes | term
+    return codes.reshape(*codes.shape[:-2], -1)

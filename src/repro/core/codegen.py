@@ -1,0 +1,206 @@
+"""Netlist -> software translation (the paper's domain-specific generator).
+
+Three consumers:
+
+* ``eval_netlist``     — numpy interpreter over uint64 bit planes.  Used by
+                         the exhaustive correctness tests (the analogue of
+                         re-simulating the synthesized netlist against the
+                         FloPoCo test bench).
+* ``make_jax_fn``      — returns a traceable function over int32 planes;
+                         under ``jax.jit`` every gate becomes one XLA
+                         elementwise bitwise op over arbitrarily wide
+                         arrays (TPU VPU lanes = the paper's SIMD lanes).
+* ``emit_source``      — generated C-like JAX source text, for inspection
+                         (mirrors the paper's generated C headers).
+
+Gate scheduling: gates are emitted in topological order with a
+register-allocation pass that reuses temporaries once their last reader
+has executed — the software analogue of the paper's topological sort +
+G++ register allocation.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import numpy as np
+
+from .circuit import (FALSE, OP_AND, OP_ANDN, OP_CONST, OP_INPUT, OP_LUT3,
+                      OP_MUX, OP_NOT, OP_OR, OP_XOR, TRUE, Graph)
+
+
+def _schedule(graph: Graph):
+    """Topo order of live logic nodes + last-use map for temp reuse."""
+    order = graph.topo_order()
+    last_use: dict[int, int] = {}
+    for pos, nid in enumerate(order):
+        n = graph.nodes[nid]
+        for ch in (n.a, n.b, n.c):
+            if ch >= 0:
+                last_use[ch] = pos
+    return order, last_use
+
+
+# ---------------------------------------------------------------------------
+# numpy interpreter
+# ---------------------------------------------------------------------------
+def eval_netlist(graph: Graph, inputs: dict[str, np.ndarray],
+                 xp=np) -> dict[str, np.ndarray]:
+    """Evaluate the circuit over bit planes.
+
+    ``inputs[name]`` must be an array whose leading axis indexes the bits
+    of bus ``name`` (shape ``[width, ...lanes]``).  Returns planes of the
+    same lane shape for every output bus.
+    """
+    sample = next(iter(inputs.values()))
+    lane_shape = sample.shape[1:]
+    dtype = sample.dtype
+    if dtype.kind == "u":
+        ones = xp.full(lane_shape, dtype.type(~dtype.type(0)), dtype=dtype)
+    else:
+        ones = xp.full(lane_shape, -1, dtype=dtype)
+    zeros = xp.zeros(lane_shape, dtype=dtype)
+
+    val: dict[int, np.ndarray] = {FALSE: zeros, TRUE: ones}
+    for nid in graph.topo_order():
+        if nid in val:
+            continue
+        n = graph.nodes[nid]
+        if n.op == OP_INPUT:
+            name, bit = n.aux
+            val[nid] = xp.asarray(inputs[name][bit])
+        elif n.op == OP_CONST:
+            val[nid] = ones if n.aux else zeros
+        elif n.op == OP_NOT:
+            val[nid] = ~val[n.a]
+        elif n.op == OP_AND:
+            val[nid] = val[n.a] & val[n.b]
+        elif n.op == OP_OR:
+            val[nid] = val[n.a] | val[n.b]
+        elif n.op == OP_XOR:
+            val[nid] = val[n.a] ^ val[n.b]
+        elif n.op == OP_ANDN:
+            val[nid] = val[n.a] & ~val[n.b]
+        elif n.op == OP_MUX:
+            s, a, b = val[n.a], val[n.b], val[n.c]
+            val[nid] = (s & a) | (~s & b)
+        elif n.op == OP_LUT3:
+            a, b, c = val[n.a], val[n.b], val[n.c]
+            tt = n.aux
+            acc = zeros
+            for m in range(8):
+                if (tt >> m) & 1:
+                    t = ones
+                    t = t & (a if m & 1 else ~a)
+                    t = t & (b if m & 2 else ~b)
+                    t = t & (c if m & 4 else ~c)
+                    acc = acc | t
+            val[nid] = acc
+        else:  # pragma: no cover
+            raise ValueError(f"bad op {n.op}")
+    return {name: xp.stack([val[w] for w in bus])
+            for name, bus in graph.outputs.items()}
+
+
+# ---------------------------------------------------------------------------
+# JAX emission
+# ---------------------------------------------------------------------------
+def make_jax_fn(graph: Graph) -> Callable:
+    """Returns f(**{name: planes}) -> {name: planes} traceable by JAX.
+
+    Planes are int arrays [width, ...lanes]; each gate traces to one
+    bitwise XLA op (MUX/LUT3 expand to their 2-input forms — the TPU VPU
+    has no ternary bitwise instruction, see DESIGN.md).
+    """
+    import jax.numpy as jnp
+
+    order, _ = _schedule(graph)
+    nodes = graph.nodes
+    outputs = dict(graph.outputs)
+
+    def fn(**inputs):
+        sample = next(iter(inputs.values()))
+        zeros = jnp.zeros_like(sample[0])
+        ones = ~zeros
+        val: dict[int, object] = {FALSE: zeros, TRUE: ones}
+        for nid in order:
+            if nid in val:
+                continue
+            n = nodes[nid]
+            if n.op == OP_INPUT:
+                name, bit = n.aux
+                val[nid] = inputs[name][bit]
+            elif n.op == OP_NOT:
+                val[nid] = ~val[n.a]
+            elif n.op == OP_AND:
+                val[nid] = val[n.a] & val[n.b]
+            elif n.op == OP_OR:
+                val[nid] = val[n.a] | val[n.b]
+            elif n.op == OP_XOR:
+                val[nid] = val[n.a] ^ val[n.b]
+            elif n.op == OP_ANDN:
+                val[nid] = val[n.a] & ~val[n.b]
+            elif n.op == OP_MUX:
+                s, a, b = val[n.a], val[n.b], val[n.c]
+                val[nid] = b ^ (s & (a ^ b))   # 3-op mux
+            elif n.op == OP_LUT3:
+                a, b, c = val[n.a], val[n.b], val[n.c]
+                tt = n.aux
+                acc = zeros
+                for m in range(8):
+                    if (tt >> m) & 1:
+                        t = (a if m & 1 else ~a)
+                        t = t & (b if m & 2 else ~b)
+                        t = t & (c if m & 4 else ~c)
+                        acc = acc | t
+                val[nid] = acc
+            else:  # pragma: no cover
+                raise ValueError(f"bad op {n.op}")
+        out = {}
+        for name, bus in outputs.items():
+            planes = [val[w] for w in bus]
+            shape = jnp.broadcast_shapes(*(p.shape for p in planes))
+            out[name] = jnp.stack([jnp.broadcast_to(p, shape)
+                                   for p in planes])
+        return out
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Source emission (for inspection / documentation)
+# ---------------------------------------------------------------------------
+_OPFMT = {
+    OP_NOT: "t{y} = ~{a}",
+    OP_AND: "t{y} = {a} & {b}",
+    OP_OR: "t{y} = {a} | {b}",
+    OP_XOR: "t{y} = {a} ^ {b}",
+    OP_ANDN: "t{y} = {a} & ~{b}",
+    OP_MUX: "t{y} = ({a} & {b}) | (~{a} & {c})",
+}
+
+
+def emit_source(graph: Graph, name: str = "circuit") -> str:
+    """Readable generated-code listing (one line per cell instance)."""
+    lines = [f"def {name}(inputs):"]
+    ref: dict[int, str] = {FALSE: "ZERO", TRUE: "ONES"}
+    for nid in graph.topo_order():
+        n = graph.nodes[nid]
+        if n.op == OP_CONST:
+            continue
+        if n.op == OP_INPUT:
+            nm, bit = n.aux
+            ref[nid] = f"{nm}[{bit}]"
+            continue
+        args = {k: ref[getattr(n, k)] for k in ("a", "b", "c")
+                if getattr(n, k) >= 0}
+        if n.op == OP_LUT3:
+            lines.append(f"    t{nid} = LUT{n.aux:03d}({args['a']}, "
+                         f"{args['b']}, {args['c']})")
+        else:
+            lines.append("    " + _OPFMT[n.op].format(y=nid, **args))
+        ref[nid] = f"t{nid}"
+    for nm, bus in graph.outputs.items():
+        lines.append(f"    {nm} = [" + ", ".join(ref[w] for w in bus) + "]")
+    lines.append("    return {" + ", ".join(
+        f"'{nm}': {nm}" for nm in graph.outputs) + "}")
+    return "\n".join(lines)

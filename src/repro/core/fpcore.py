@@ -1,0 +1,258 @@
+"""Gate-level FloPoCo-style FP multiplier / adder circuit generators.
+
+These builders play the role of FloPoCo in the paper's flow: they emit
+combinational circuits (over :mod:`repro.core.circuit`) implementing
+custom-precision FP arithmetic with the exact same semantics as the
+word-parallel oracle in :mod:`repro.core.softfloat` — the tests check
+bit-exact agreement, exhaustively for small formats.
+
+Circuits assume *canonical* input codes (non-normal values carry zero
+exponent/fraction fields), which is what ``softfloat.pack`` and
+``softfloat.encode`` produce, and they emit canonical outputs.
+"""
+from __future__ import annotations
+
+from . import blocks as B
+from .circuit import FALSE, TRUE, Graph
+from .fpformat import RNE, RTZ, FPFormat
+
+_GUARD = 3  # must match softfloat._GUARD
+
+
+# ---------------------------------------------------------------------------
+# Field helpers
+# ---------------------------------------------------------------------------
+def split_fields(bus: list[int], fmt: FPFormat):
+    """code bus (LSB first) -> (exc2, sign, exp, frac) wire groups."""
+    f = bus[0:fmt.w_f]
+    e = bus[fmt.w_f:fmt.w_f + fmt.w_e]
+    s = bus[fmt.sign_off]
+    exc = bus[fmt.exc_off:fmt.exc_off + 2]  # [exc0, exc1]
+    return exc, s, e, f
+
+
+def exc_flags(g: Graph, exc: list[int]):
+    """-> (is_zero, is_normal, is_inf, is_nan)."""
+    e0, e1 = exc
+    return (g.AND(g.NOT(e1), g.NOT(e0)),
+            g.AND(g.NOT(e1), e0),
+            g.AND(e1, g.NOT(e0)),
+            g.AND(e1, e0))
+
+
+def pack_fields(g: Graph, exc0: int, exc1: int, sign: int,
+                exp: list[int], frac: list[int], fmt: FPFormat) -> list[int]:
+    """Assemble a canonical code bus: exp/frac masked unless normal."""
+    normal = g.AND(g.NOT(exc1), exc0)
+    bus = [g.AND(b, normal) for b in frac]
+    bus += [g.AND(b, normal) for b in exp]
+    bus += [sign, exc0, exc1]
+    assert len(bus) == fmt.nbits
+    return bus
+
+
+def _round_bits(g: Graph, kept: list[int], rnd: int, sticky: int,
+                rounding: str) -> tuple[list[int], int]:
+    """Round `kept` given round bit + sticky.  Returns (rounded, carry)."""
+    if rounding == RTZ:
+        return list(kept), FALSE
+    assert rounding == RNE
+    round_up = g.AND(rnd, g.OR(sticky, kept[0]))
+    return B.increment(g, kept, round_up)
+
+
+# ---------------------------------------------------------------------------
+# Multiplier
+# ---------------------------------------------------------------------------
+def mul_wires(g: Graph, x: list[int], y: list[int], fmt_in: FPFormat,
+              fmt_out: FPFormat, rounding: str = RNE) -> list[int]:
+    assert fmt_out.w_e == fmt_in.w_e
+    wf, we = fmt_in.w_f, fmt_in.w_e
+    exc_x, sx, ex, fx = split_fields(x, fmt_in)
+    exc_y, sy, ey, fy = split_fields(y, fmt_in)
+    x_zero, x_norm, x_inf, x_nan = exc_flags(g, exc_x)
+    y_zero, y_norm, y_inf, y_nan = exc_flags(g, exc_y)
+
+    sign = g.XOR(sx, sy)
+
+    # Exact significand product (2wf+2 bits).
+    prod = B.mul_unsigned(g, fx + [TRUE], fy + [TRUE])
+    norm = prod[2 * wf + 1]
+    # Normalized 1.f significand: 2wf+1 fraction bits.
+    frac_full = [g.MUX(norm, prod[i], prod[i - 1] if i > 0 else FALSE)
+                 for i in range(2 * wf + 1)]
+
+    drop = (2 * wf + 1) - fmt_out.w_f
+    if drop < 0:
+        frac_r, carry = [FALSE] * (-drop) + frac_full, FALSE
+    elif drop == 0:
+        frac_r, carry = frac_full, FALSE
+    else:
+        kept = frac_full[drop:]
+        rnd = frac_full[drop - 1]
+        sticky = B.or_reduce(g, frac_full[:drop - 1])
+        frac_r, carry = _round_bits(g, kept, rnd, sticky, rounding)
+    frac_r = frac_r[:fmt_out.w_f]  # on carry the increment wrapped to 0
+
+    # e_res = ex + ey + norm + carry - bias, in we+2-bit two's complement.
+    # Two fused ripple chains: (ex + ey + norm), then (+ (2^W - bias) + carry).
+    W = we + 2
+    e_sum, _ = B.ripple_add(g, ex, ey, cin=norm, width=W)
+    e_res, _ = B.ripple_add(g, e_sum,
+                            B.const_bus(g, (1 << W) - fmt_in.bias, W),
+                            cin=carry, width=W)
+    neg = e_res[W - 1]
+    underflow = neg
+    overflow = g.AND(g.NOT(neg), e_res[we])
+
+    nan = g.OR(g.OR(x_nan, y_nan),
+               g.OR(g.AND(x_inf, y_zero), g.AND(x_zero, y_inf)))
+    inf_raw = g.OR(g.OR(g.AND(x_inf, g.OR(y_inf, y_norm)),
+                        g.AND(y_inf, x_norm)),
+                   g.AND(g.AND(x_norm, y_norm), overflow))
+    inf = g.AND(g.NOT(nan), inf_raw)
+    zero_raw = g.OR(g.OR(g.AND(x_zero, g.OR(y_zero, y_norm)),
+                         g.AND(y_zero, x_norm)),
+                    g.AND(g.AND(x_norm, y_norm), underflow))
+    zero = g.AND(g.AND(g.NOT(nan), g.NOT(inf)), zero_raw)
+
+    # exc encoding: zero=00 normal=01 inf=10 nan=11
+    exc1 = g.OR(nan, inf)
+    exc0 = g.OR(nan, g.AND(g.NOT(g.OR(inf, zero)), TRUE))
+    # exc0 = nan | normal;  normal = !nan & !inf & !zero
+    normal = g.AND(g.NOT(nan), g.AND(g.NOT(inf), g.NOT(zero)))
+    exc0 = g.OR(nan, normal)
+
+    # underflow-flushed zeros are +0; zero-operand products keep XOR sign
+    uf_zero = g.AND(g.AND(g.AND(x_norm, y_norm), underflow), zero)
+    sign_out = g.AND(sign, g.NOT(g.OR(nan, uf_zero)))
+    return pack_fields(g, exc0, exc1, sign_out, e_res[:we], frac_r, fmt_out)
+
+
+def build_mul(fmt_in: FPFormat, fmt_out: FPFormat,
+              rounding: str = RNE) -> Graph:
+    g = Graph()
+    x = g.input_bus("x", fmt_in.nbits)
+    y = g.input_bus("y", fmt_in.nbits)
+    g.output_bus("out", mul_wires(g, x, y, fmt_in, fmt_out, rounding))
+    return g
+
+
+# ---------------------------------------------------------------------------
+# Adder
+# ---------------------------------------------------------------------------
+def add_wires(g: Graph, x: list[int], y: list[int], fmt: FPFormat,
+              rounding: str = RNE) -> list[int]:
+    wf, we, G = fmt.w_f, fmt.w_e, _GUARD
+    W = wf + 1 + G
+    assert wf + G + 2 < (1 << (we + 1)), "exponent range too small for datapath"
+    exc_x, sx, ex, fx = split_fields(x, fmt)
+    exc_y, sy, ey, fy = split_fields(y, fmt)
+    x_zero, x_norm, x_inf, x_nan = exc_flags(g, exc_x)
+    y_zero, y_norm, y_inf, y_nan = exc_flags(g, exc_y)
+
+    # Magnitude comparison key: (normal, exp, frac); canonical non-normals
+    # have zero fields so they always lose against normals.
+    key_x = fx + ex + [x_norm]
+    key_y = fy + ey + [y_norm]
+    swap = B.ult(g, key_x, key_y)
+
+    s_big = g.MUX(swap, sy, sx)
+    e_big = B.mux_bus(g, swap, ey, ex)
+    f_big = B.mux_bus(g, swap, fy, fx)
+    e_sml = B.mux_bus(g, swap, ex, ey)
+    f_sml = B.mux_bus(g, swap, fx, fy)
+    big_norm = g.MUX(swap, y_norm, x_norm)
+    sml_norm = g.MUX(swap, x_norm, y_norm)
+
+    # Significands with G guard bits, gated by the normal flags.
+    sig_big = [FALSE] * G + [g.AND(b, big_norm) for b in f_big] + [big_norm]
+    sig_sml_full = ([FALSE] * G + [g.AND(b, sml_norm) for b in f_sml]
+                    + [sml_norm])
+
+    d, _ = B.ripple_sub(g, e_big, e_sml)  # >= 0 for canonical inputs
+    sig_sml, sticky_in = B.shr_barrel(g, sig_sml_full, d, collect_sticky=True)
+    sig_sml = [g.OR(sig_sml[0], sticky_in)] + sig_sml[1:]
+
+    sub = g.XOR(sx, sy)
+    addend = [g.XOR(b, sub) for b in sig_sml]
+    summ, cout = B.ripple_add(g, sig_big, addend, cin=sub, width=W)
+    mag = summ + [g.AND(cout, g.NOT(sub))]          # W+1 bits
+    mag_zero = B.eq_zero(g, mag)
+
+    carry_case = mag[W]
+    # carry path: shift right one, keeping bit0 as sticky
+    mag_r = [g.OR(mag[1], mag[0])] + mag[2:W + 1]   # W bits
+    # left path: fused leading-zero count + shift (normalizer)
+    mag_low = B.mux_bus(g, mag_zero, B.const_bus(g, 1, W), mag[:W])
+    mag_l, lz = B.normalize_shift(g, mag_low)
+    mag_n = B.mux_bus(g, carry_case, mag_r, mag_l)  # W bits, MSB normalized
+
+    # e_res = e_big + 1 (carry) or e_big - lz, in we+2-bit two's complement
+    WE = we + 2
+    e_ext = list(e_big) + [FALSE, FALSE]
+    e_inc, _ = B.ripple_add(g, e_ext, B.const_bus(g, 1, WE), width=WE)
+    e_dec, _ = B.ripple_sub(g, e_ext, lz + [FALSE] * (WE - len(lz)), width=WE)
+    e_res = B.mux_bus(g, carry_case, e_inc, e_dec)
+
+    # rounding on the G guard bits
+    kept = mag_n[G:]                                # wf+1 bits
+    rnd = mag_n[G - 1]
+    sticky = B.or_reduce(g, mag_n[:G - 1])
+    frac_r, rcarry = _round_bits(g, kept, rnd, sticky, rounding)
+    frac_out = frac_r[:wf]                          # on rcarry this is 0
+    e_res, _ = B.ripple_add(g, e_res, B.const_bus(g, 0, WE),
+                            cin=rcarry, width=WE)
+
+    neg = e_res[WE - 1]
+    underflow = neg
+    overflow = g.AND(g.NOT(neg), e_res[we])
+
+    both_norm = g.AND(x_norm, y_norm)
+    nan = g.OR(g.OR(x_nan, y_nan), g.AND(g.AND(x_inf, y_inf), sub))
+    inf = g.AND(g.NOT(nan),
+                g.OR(g.OR(x_inf, y_inf), g.AND(both_norm, overflow)))
+    cancel = g.AND(both_norm, mag_zero)
+    both_zero = g.AND(x_zero, y_zero)
+    zero = g.AND(g.AND(g.NOT(nan), g.NOT(inf)),
+                 g.OR(g.OR(both_zero, cancel),
+                      g.AND(both_norm, underflow)))
+    pass_x = g.AND(x_norm, y_zero)
+    pass_y = g.AND(y_norm, x_zero)
+    normal = g.AND(g.NOT(nan), g.AND(g.NOT(inf), g.NOT(zero)))
+
+    exc1 = g.OR(nan, inf)
+    exc0 = g.OR(nan, normal)
+
+    sign = g.MUX(x_inf, sx, g.MUX(y_inf, sy, s_big))
+    sign = g.MUX(g.AND(zero, g.NOT(both_zero)), FALSE, sign)
+    sign = g.MUX(both_zero, g.AND(sx, sy), sign)
+    sign = g.AND(sign, g.NOT(nan))
+
+    e_out = B.mux_bus(g, pass_x, ex, B.mux_bus(g, pass_y, ey, e_res[:we]))
+    f_out = B.mux_bus(g, pass_x, fx, B.mux_bus(g, pass_y, fy, frac_out))
+    sign = g.MUX(pass_x, sx, g.MUX(pass_y, sy, sign))
+    return pack_fields(g, exc0, exc1, sign, e_out, f_out, fmt)
+
+
+def build_add(fmt: FPFormat, rounding: str = RNE) -> Graph:
+    g = Graph()
+    x = g.input_bus("x", fmt.nbits)
+    y = g.input_bus("y", fmt.nbits)
+    g.output_bus("out", add_wires(g, x, y, fmt, rounding))
+    return g
+
+
+# ---------------------------------------------------------------------------
+# Fused MAC circuit: out = add(mul(x, y), acc) at accumulator precision.
+# ---------------------------------------------------------------------------
+def build_mac(fmt_in: FPFormat, extended: bool = False,
+              rounding: str = RNE) -> Graph:
+    fmt_out = fmt_in.mult_out(extended)
+    g = Graph()
+    x = g.input_bus("x", fmt_in.nbits)
+    y = g.input_bus("y", fmt_in.nbits)
+    acc = g.input_bus("acc", fmt_out.nbits)
+    prod = mul_wires(g, x, y, fmt_in, fmt_out, rounding)
+    g.output_bus("out", add_wires(g, prod, acc, fmt_out, rounding))
+    return g

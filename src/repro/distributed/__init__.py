@@ -1,0 +1,3 @@
+from .sharding import (batch_pspecs, cache_pspecs, named, state_pspecs)
+
+__all__ = ["batch_pspecs", "cache_pspecs", "state_pspecs", "named"]

@@ -1,0 +1,83 @@
+"""Gradient compression for the cross-pod all-reduce.
+
+At 2+ pods the `pod` axis all-reduce crosses the slowest links, and
+gradients tolerate aggressive quantization when the quantization error
+is *fed back* (error-feedback / EF-SGD): each step sends int8 codes with
+a per-tensor scale and accumulates the residual locally, so the bias
+vanishes over steps and convergence matches f32 all-reduce to first
+order.
+
+``compressed_psum`` is the shard_map-side primitive (quantize ->
+psum -> dequantize) and ``compress_grads``/``make_error_feedback`` the
+step-level wrapper the train loop uses: grads are DP-synced in int8
+(4x fewer bytes than f32 on the wire), with stochastic rounding driven
+by a per-step key so the compression itself stays unbiased.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x, key=None):
+    """f32 -> (int8 codes, f32 scale).  Symmetric per-tensor scaling;
+    stochastic rounding when a key is supplied."""
+    x = x.astype(jnp.float32)
+    amax = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12)
+    scale = amax / 127.0
+    y = x / scale
+    if key is not None:
+        y = y + jax.random.uniform(key, y.shape, minval=-0.5, maxval=0.5)
+    codes = jnp.clip(jnp.round(y), -127, 127).astype(jnp.int8)
+    return codes, scale
+
+
+def dequantize_int8(codes, scale):
+    return codes.astype(jnp.float32) * scale
+
+
+def compressed_psum(x, axis_name: str, key=None):
+    """int8-compressed psum over `axis_name` (call inside shard_map).
+
+    Scales are maxed across the group so codes are commensurable; the
+    integer sum is exact in int32 (<= 127 * group_size per element)."""
+    amax = jax.lax.pmax(jnp.max(jnp.abs(x.astype(jnp.float32))),
+                        axis_name)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    y = x.astype(jnp.float32) / scale
+    if key is not None:
+        y = y + jax.random.uniform(key, y.shape, minval=-0.5, maxval=0.5)
+    codes = jnp.clip(jnp.round(y), -127, 127).astype(jnp.int8)
+    total = jax.lax.psum(codes.astype(jnp.int32), axis_name)
+    return total.astype(jnp.float32) * scale
+
+
+def make_error_feedback(grads_like):
+    """Initial error-feedback residual state (zeros like grads)."""
+    return jax.tree.map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads_like)
+
+
+def compress_grads(grads, ef_state, key=None):
+    """One EF round *without* the collective (unit-testable core):
+    returns (decoded grads as the receiver sees them, new ef_state)."""
+    leaves, treedef = jax.tree.flatten(grads)
+    ef_leaves = jax.tree.leaves(ef_state)
+    keys = (jax.random.split(key, len(leaves)) if key is not None
+            else [None] * len(leaves))
+    outs, new_ef = [], []
+    for g, e, k in zip(leaves, ef_leaves, keys):
+        corrected = g.astype(jnp.float32) + e
+        codes, scale = quantize_int8(corrected, k)
+        decoded = dequantize_int8(codes, scale)
+        outs.append(decoded)
+        new_ef.append(corrected - decoded)
+    return (jax.tree.unflatten(treedef, outs),
+            jax.tree.unflatten(treedef, new_ef))
+
+
+def wire_bytes(grads, compressed: bool) -> int:
+    leaves = jax.tree.leaves(grads)
+    if compressed:
+        return sum(l.size * 1 + 4 for l in leaves)
+    return sum(l.size * 4 for l in leaves)

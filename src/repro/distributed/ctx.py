@@ -1,0 +1,56 @@
+"""Trace-time activation-sharding context.
+
+Production GSPMD programs do not leave activation layouts to sharding
+propagation: every major activation gets an explicit
+``with_sharding_constraint`` anchor (the MaxText/Megatron recipe).
+Model code calls ``constrain(x, *logical_axes)``; the launcher installs
+the logical->mesh rules for the current mesh/phase before tracing.
+Outside a launcher (unit tests, CPU examples) the context is empty and
+``constrain`` is the identity, so model code never depends on a mesh.
+
+Logical activation axes (resolved by repro.models.schema.Rules with
+per-dim divisibility fallback to replication):
+
+  batch    -> ("pod","data")   activation batch dim
+  act_seq  -> "model"          sequence parallelism for the residual
+                               stream (train/prefill; decode's seq=1
+                               auto-replicates via divisibility)
+  qheads/kvheads/qgroups/mlp/ssm/experts/vocab -> "model" tensor
+                               parallelism inside attention/FFN/SSD
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+_RULES = [None]
+
+
+def set_act_rules(rules) -> None:
+    _RULES[0] = rules
+
+
+def get_act_rules():
+    return _RULES[0]
+
+
+@contextlib.contextmanager
+def act_rules(rules):
+    prev = _RULES[0]
+    _RULES[0] = rules
+    try:
+        yield
+    finally:
+        _RULES[0] = prev
+
+
+def constrain(x, *axes):
+    """Anchor activation `x` to its logical sharding (no-op when no
+    rules are installed)."""
+    rules = _RULES[0]
+    if rules is None:
+        return x
+    from repro.models.schema import logical_spec
+    spec = logical_spec(rules, *axes, dims=x.shape)
+    return jax.lax.with_sharding_constraint(x, spec)

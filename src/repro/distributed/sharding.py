@@ -1,0 +1,63 @@
+"""PartitionSpec derivation for every tree that crosses the jit boundary.
+
+Parameters (and optimizer moments) take their specs from the schema's
+logical axes.  Batches shard their leading batch dim over the data(+pod)
+axes.  Caches are matched structurally by leaf name: KV caches shard
+batch over data and heads over model, falling back to sequence sharding
+over "data" when batch is too small to split (the long-context decode
+cells — GSPMD then lowers row softmax as flash-decode partials + a
+combine collective).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.models.config import ModelConfig
+from repro.models.schema import Rules, logical_spec, make_rules, pspecs
+
+_CACHE_AXES = {
+    "k": ("layers", "batch", "kvseq", "kvheads", None),
+    "v": ("layers", "batch", "kvseq", "kvheads", None),
+    "ck": ("layers", "batch", "kvseq", "kvheads", None),
+    "cv": ("layers", "batch", "kvseq", "kvheads", None),
+    "conv": ("layers", "batch", None, "ssm"),
+    "ssd": ("layers", "batch", "ssm", None, None),
+}
+
+
+def state_pspecs(schema, rules: Rules):
+    """Specs for {params, opt{m,v}, step} given the params schema."""
+    p = pspecs(schema, rules)
+    return {"params": p, "opt": {"m": p, "v": p},
+            "step": PartitionSpec()}
+
+
+def batch_pspecs(batch_tree, rules: Rules):
+    def leaf(x):
+        axes = ("batch",) + (None,) * (len(x.shape) - 1)
+        return logical_spec(rules, *axes, dims=x.shape)
+    return jax.tree.map(leaf, batch_tree)
+
+
+def cache_pspecs(cache_tree, rules: Rules):
+    def walk(tree):
+        out = {}
+        for name, sub in tree.items():
+            if isinstance(sub, dict):
+                out[name] = walk(sub)
+            else:
+                axes = _CACHE_AXES[name]
+                out[name] = logical_spec(rules, *axes, dims=sub.shape)
+        return out
+    return walk(cache_tree)
+
+
+def named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, PartitionSpec))
+
+
+def rules_for(mesh, cfg: ModelConfig | None = None) -> Rules:
+    return make_rules(mesh)

@@ -1,0 +1,106 @@
+"""Pallas TPU kernel for the bitslice-parallel HOBFLOPS MAC (GEMM form).
+
+TPU adaptation of the paper's CNN convolution (Fig. 5):
+
+* The paper's SIMD register (128-512 bits) becomes a VMEM-resident tile
+  of int32 lane words: every gate of the synthesized MAC netlist executes
+  as one VPU elementwise op over a [P_blk, M_words] tile — an effective
+  bitslice width of ``P_blk * M_words * 32`` lanes per instruction.
+* Weights are bitsliced along the M (output-channel) axis — the paper's
+  "tile the M kernels by LANES"; IFM bits are broadcast to all lanes as
+  0/-1 masks — the paper's "broadcast the IFM channel across kernels".
+* The reduction over input channels C runs as the innermost *grid*
+  dimension with output-block revisiting, so the OFM accumulator planes
+  stay resident in VMEM while C streams through (HBM->VMEM once).
+
+Layouts:
+    i_masks : [P, C, NIN]  int32, each element 0 or -1 (bit broadcast)
+    w_planes: [C, NIN, Mw] int32, bit b of weight (c, 32*w+j) in bit j
+              of w_planes[c, b, w]
+    out     : [NOUT, P, Mw] int32 OFM bit planes
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.codegen import make_jax_fn
+from repro.core.fpcore import build_mac
+from repro.core.fpformat import RNE, FPFormat
+from repro.core.opt import CELL_LIBS, tech_map
+
+
+@functools.lru_cache(maxsize=None)
+def mac_netlist_fn(fmt: FPFormat, extended: bool, rounding: str):
+    """TPU-mapped MAC netlist as a traceable planes->planes function."""
+    g = build_mac(fmt, extended, rounding)
+    mapped = tech_map(g, CELL_LIBS["tpu_vpu"]())
+    return make_jax_fn(mapped), mapped
+
+
+def _mac_kernel(i_ref, w_ref, o_ref, *, c_block: int, nin: int, nout: int,
+                fmt: FPFormat, extended: bool, rounding: str):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        # +0.0 in FloPoCo encoding is the all-zero code word.
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    fn, _ = mac_netlist_fn(fmt, extended, rounding)
+    acc_shape = o_ref.shape[1:]  # [P_blk, Mt]
+
+    def step(c, acc):
+        xw = w_ref[c]                       # [NIN, Mt] weight planes
+        yb = i_ref[:, c, :]                 # [P_blk, NIN] ifm masks
+        x = xw[:, None, :]                  # [NIN, 1, Mt]
+        y = jnp.transpose(yb, (1, 0))[:, :, None]   # [NIN, P_blk, 1]
+        out = fn(x=x, y=y, acc=acc)["out"]
+        return jnp.broadcast_to(out, (nout,) + acc_shape)
+
+    acc = jax.lax.fori_loop(0, c_block, step, o_ref[...])
+    o_ref[...] = acc
+
+
+def bitslice_mac_pallas(i_masks, w_planes, *, fmt: FPFormat,
+                        extended: bool = False, rounding: str = RNE,
+                        p_block: int = 8, m_block: int = 128,
+                        c_block: int = 64, interpret: bool = False):
+    """Launch the bitslice MAC kernel.
+
+    i_masks: [P, C, NIN] int32 in {0, -1}; w_planes: [C, NIN, Mw] int32.
+    Returns OFM planes [NOUT, P, Mw] int32.  P % p_block == 0,
+    Mw % m_block == 0, C % c_block == 0 (pad with +0 codes upstream —
+    zero-padding is the identity for the HOBFLOPS MAC).
+    """
+    P, C, nin = i_masks.shape
+    C2, nin2, Mw = w_planes.shape
+    assert (C, nin) == (C2, nin2), (i_masks.shape, w_planes.shape)
+    assert nin == fmt.nbits
+    nout = fmt.mult_out(extended).nbits
+    p_block = min(p_block, P)
+    m_block = min(m_block, Mw)
+    c_block = min(c_block, C)
+    assert P % p_block == 0 and Mw % m_block == 0 and C % c_block == 0
+
+    grid = (P // p_block, Mw // m_block, C // c_block)
+    kernel = functools.partial(_mac_kernel, c_block=c_block, nin=nin,
+                               nout=nout, fmt=fmt, extended=extended,
+                               rounding=rounding)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((p_block, c_block, nin),
+                         lambda pi, mi, ci: (pi, ci, 0)),
+            pl.BlockSpec((c_block, nin, m_block),
+                         lambda pi, mi, ci: (ci, 0, mi)),
+        ],
+        out_specs=pl.BlockSpec((nout, p_block, m_block),
+                               lambda pi, mi, ci: (0, pi, mi)),
+        out_shape=jax.ShapeDtypeStruct((nout, P, Mw), jnp.int32),
+        interpret=interpret,
+    )(i_masks, w_planes)

@@ -1,0 +1,107 @@
+"""Public jit'd API for the HOBFLOPS bitslice MAC.
+
+``hobflops_matmul``: float32 in / float32 out GEMM whose arithmetic is
+custom-precision HOBFLOPS FP executed bitslice-parallel.  Two backends:
+
+* ``backend="pallas"``  — the TPU kernel (``interpret=True`` on CPU).
+* ``backend="jnp"``     — the same synthesized netlist traced as plain
+                          XLA elementwise ops over full arrays; used for
+                          CPU benchmarking and as a portability fallback.
+
+Both produce bit-identical results; tests cross-check them and the
+pure softfloat oracle in ref.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import softfloat as sf
+from repro.core.bitslice import pack_planes, unpack_planes
+from repro.core.fpformat import RNE, FPFormat
+
+from .kernel import bitslice_mac_pallas, mac_netlist_fn
+
+LANE = 32
+
+
+def _pad_to(x, mult, axis):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def encode_inputs(i_f32, w_f32, fmt: FPFormat, rounding: str = RNE,
+                  p_block: int = 8, m_block: int = 128, c_block: int = 64):
+    """float32 [P,C] x [C,M] -> (i_masks [P,C,NIN], w_planes [C,NIN,Mw])."""
+    ic = sf.encode_jnp(i_f32, fmt, rounding)        # [P, C] int32
+    wc = sf.encode_jnp(w_f32, fmt, rounding)        # [C, M] int32
+    ic = _pad_to(_pad_to(ic, p_block, 0), c_block, 1)
+    wc = _pad_to(_pad_to(wc, c_block, 0), m_block * LANE, 1)
+    nin = fmt.nbits
+    bits = (ic[..., None] >> jnp.arange(nin, dtype=jnp.int32)) & 1
+    i_masks = -bits.astype(jnp.int32)                # 0 / -1 masks
+    w_planes = jnp.moveaxis(pack_planes(wc, nin), 0, 1)  # [C, NIN, Mw]
+    return i_masks, w_planes
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "fmt", "extended", "rounding", "backend", "interpret",
+    "p_block", "m_block", "c_block"))
+def hobflops_matmul(i_f32, w_f32, *, fmt: FPFormat, extended: bool = False,
+                    rounding: str = RNE, backend: str = "pallas",
+                    interpret: bool = False, p_block: int = 8,
+                    m_block: int = 128, c_block: int = 64):
+    """GEMM [P,C] @ [C,M] -> [P,M] float32, in HOBFLOPS arithmetic."""
+    P, C = i_f32.shape
+    C2, M = w_f32.shape
+    assert C == C2
+    i_masks, w_planes = encode_inputs(i_f32, w_f32, fmt, rounding,
+                                      p_block, m_block, c_block)
+    if backend == "pallas":
+        out = bitslice_mac_pallas(
+            i_masks, w_planes, fmt=fmt, extended=extended,
+            rounding=rounding, p_block=p_block, m_block=m_block,
+            c_block=c_block, interpret=interpret)
+    elif backend == "jnp":
+        out = _bitslice_mac_jnp(i_masks, w_planes, fmt=fmt,
+                                extended=extended, rounding=rounding)
+    else:
+        raise ValueError(backend)
+    fmt_out = fmt.mult_out(extended)
+    codes = unpack_planes(out)                      # [P', Mw*32]
+    vals = sf.decode_jnp(codes, fmt_out)
+    return vals[:P, :M]
+
+
+def _bitslice_mac_jnp(i_masks, w_planes, *, fmt: FPFormat, extended: bool,
+                      rounding: str):
+    """Netlist over full arrays with a scan over C (pure XLA path)."""
+    fn, _ = mac_netlist_fn(fmt, extended, rounding)
+    P, C, nin = i_masks.shape
+    _, _, Mw = w_planes.shape
+    nout = fmt.mult_out(extended).nbits
+    acc0 = jnp.zeros((nout, P, Mw), jnp.int32)
+    xs = (jnp.moveaxis(i_masks, 1, 0),              # [C, P, NIN]
+          w_planes)                                 # [C, NIN, Mw]
+
+    def step(acc, xw):
+        ib, wp = xw                                  # [P,NIN], [NIN,Mw]
+        x = wp[:, None, :]                           # [NIN, 1, Mw]
+        y = jnp.transpose(ib, (1, 0))[:, :, None]    # [NIN, P, 1]
+        out = fn(x=x, y=y, acc=acc)["out"]
+        return jnp.broadcast_to(out, acc.shape), None
+
+    acc, _ = jax.lax.scan(step, acc0, xs)
+    return acc
+
+
+def hobflops_quantize(x_f32, fmt: FPFormat, rounding: str = RNE):
+    """Round-trip float32 through the HOBFLOPS format (fake-quant)."""
+    return sf.decode_jnp(sf.encode_jnp(x_f32, fmt, rounding), fmt)

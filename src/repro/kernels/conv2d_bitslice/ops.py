@@ -1,0 +1,89 @@
+"""The paper's CNN convolution on the bitslice-parallel HOBFLOPS MAC.
+
+Convolution is lowered to the verified bitslice GEMM by im2col: IFM
+patches [B*Ho*Wo, kh*kw*C] against kernels [kh*kw*C, M] (the paper's
+Fig. 5 layout with LANES of kernels per bitslice word).  ReLU runs *in
+the HOBFLOPS domain* as one bitwise op per plane: clearing every plane
+where the sign plane is set maps negative values to the canonical +0
+code (exc=00) — activation for free inside the bitslice pipeline,
+exactly the "data stays in HOBFLOPS format between layers" flow of
+paper §3.4.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fpformat import RNE, FPFormat
+from repro.kernels.bitslice_mac.kernel import bitslice_mac_pallas
+from repro.kernels.bitslice_mac.ops import (_bitslice_mac_jnp,
+                                            encode_inputs)
+
+
+def im2col(images, kh: int, kw: int, stride: int = 1,
+           padding: str = "SAME"):
+    """[B, H, W, C] -> patches [B, Ho, Wo, kh*kw*C]."""
+    B, H, W, C = images.shape
+    if padding == "SAME":
+        pad_h = max((-(-H // stride) - 1) * stride + kh - H, 0)
+        pad_w = max((-(-W // stride) - 1) * stride + kw - W, 0)
+    else:
+        pad_h = pad_w = 0
+    x = jnp.pad(images, ((0, 0), (pad_h // 2, pad_h - pad_h // 2),
+                         (pad_w // 2, pad_w - pad_w // 2), (0, 0)))
+    Ho = (x.shape[1] - kh) // stride + 1
+    Wo = (x.shape[2] - kw) // stride + 1
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            cols.append(jax.lax.slice(
+                x, (0, i, j, 0),
+                (B, i + (Ho - 1) * stride + 1, j + (Wo - 1) * stride + 1,
+                 C), (1, stride, stride, 1)))
+    return jnp.concatenate(cols, axis=-1).reshape(B, Ho, Wo, kh * kw * C)
+
+
+def hobflops_relu_planes(planes, fmt: FPFormat):
+    """OFM bit planes [NOUT, ...] -> ReLU'd planes: negative values
+    become the all-zero (+0, exc=00) code.  One ANDN per plane."""
+    sign = planes[fmt.sign_off]
+    keep = ~sign
+    return planes & keep[None]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "fmt", "kh", "kw", "stride", "padding", "extended", "rounding",
+    "relu", "backend", "interpret"))
+def hobflops_conv2d(images, kernels, *, fmt: FPFormat, stride: int = 1,
+                    padding: str = "SAME", extended: bool = False,
+                    rounding: str = RNE, relu: bool = False,
+                    backend: str = "jnp", interpret: bool = False,
+                    kh: int | None = None, kw: int | None = None):
+    """images [B,H,W,C] f32, kernels [kh,kw,C,M] f32 -> [B,Ho,Wo,M] f32
+    computed entirely in HOBFLOPS bitslice arithmetic."""
+    khh, kww, C, M = kernels.shape
+    patches = im2col(images, khh, kww, stride, padding)
+    B, Ho, Wo, K = patches.shape
+    pf = patches.reshape(B * Ho * Wo, K)
+    wf = kernels.reshape(K, M)
+
+    from repro.core import softfloat as sf
+    from repro.core.bitslice import unpack_planes
+    i_masks, w_planes = encode_inputs(pf, wf, fmt, rounding)
+    if backend == "pallas":
+        out = bitslice_mac_pallas(i_masks, w_planes, fmt=fmt,
+                                  extended=extended, rounding=rounding,
+                                  p_block=min(8, i_masks.shape[0]),
+                                  m_block=1, c_block=min(64, K),
+                                  interpret=interpret)
+    else:
+        out = _bitslice_mac_jnp(i_masks, w_planes, fmt=fmt,
+                                extended=extended, rounding=rounding)
+    fmt_out = fmt.mult_out(extended)
+    if relu:
+        out = hobflops_relu_planes(out, fmt_out)
+    codes = unpack_planes(out)
+    vals = sf.decode_jnp(codes, fmt_out)
+    return vals[:B * Ho * Wo, :M].reshape(B, Ho, Wo, M)

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the fused dequant matmul."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import softfloat as sf
+from repro.core.bitslice import unpack_planes
+from repro.core.fpformat import StorageFormat
+
+
+def dequant_matmul_ref(x, planes, scale, sfmt: StorageFormat, N: int):
+    """x [M,K], planes [nbits,K,N//32] int32 -> [M,N] f32 (unfused)."""
+    nbits, K, Nw = planes.shape
+    codes = unpack_planes(planes.reshape(nbits, K * Nw))  # [K*Nw*32]
+    codes = codes.reshape(K, Nw * 32)[:, :N]
+    w = sf.decode_storage(codes, sfmt) * scale
+    return x.astype(jnp.float32) @ w

@@ -1,0 +1,251 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above run before any other import — jax locks the device
+count at first init, and the production meshes need 512 placeholder
+devices on this CPU-only container.  Everything else (tests, benches,
+examples) sees the real single device.
+
+Per cell this produces (written to experiments/dryrun/<cell>.json):
+  * compile proof: .lower().compile() succeeded under the target mesh
+  * memory_analysis()  — per-device argument/output/temp bytes
+  * cost_analysis()    — XLA's aggregate (loop bodies counted once)
+  * loop-aware per-chip flops / bytes / collective-bytes from
+    repro.launch.hlo_cost (trip-count corrected) — §Roofline inputs
+"""
+import argparse
+import dataclasses
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (ARCH_NAMES, batch_specs, decode_specs,
+                           get_config)
+from repro.distributed.ctx import act_rules
+from repro.distributed.sharding import (batch_pspecs, cache_pspecs, named,
+                                        state_pspecs)
+from repro.launch import hlo_cost
+from repro.launch.mesh import make_production_mesh
+from repro.models import model_schema
+from repro.models.config import SHAPES, shape_applicable
+from repro.models.schema import (abstract_params, logical_spec, make_rules,
+                                 param_count, pspecs)
+from repro.optim import OptConfig
+from repro.serve.steps import make_decode_step, make_prefill_step
+from repro.train.step import TrainConfig, abstract_state, make_train_step
+
+# Per-arch runtime knobs for the production cells.  n_micro keeps the
+# activation working set inside HBM; sequence parallelism is on by
+# default (see distributed.ctx); bf16 moments/grads are the only way
+# 300B+ parameter Adam states fit a 256-chip pod at all.
+RUNTIME: dict[str, dict] = {
+    "grok-1-314b": dict(n_micro=8, moment_dtype="bfloat16",
+                        grad_dtype="bfloat16"),
+    "llama3-405b": dict(n_micro=8, moment_dtype="bfloat16",
+                        grad_dtype="bfloat16"),
+    "internvl2-26b": dict(n_micro=8),
+    "jamba-v0.1-52b": dict(n_micro=8),
+    "olmoe-1b-7b": dict(n_micro=4),
+    "gemma-2b": dict(n_micro=4),
+    "qwen3-4b": dict(n_micro=4),
+    "qwen2-0.5b": dict(n_micro=2),
+    "mamba2-2.7b": dict(n_micro=8),
+    "seamless-m4t-medium": dict(n_micro=2),
+}
+
+PEAK_FLOPS = 197e12      # bf16 per chip (TPU v5e)
+HBM_BW = 819e9           # bytes/s per chip
+LINK_BW = 50e9           # bytes/s per ICI link
+
+
+def build_lowered(arch: str, shape_name: str, mesh_kind: str,
+                  overrides: dict | None = None):
+    """Returns (lowered, info) for one cell."""
+    overrides = overrides or {}
+    cfg = get_config(arch)
+    if overrides.get("cfg_replace"):
+        cfg = dataclasses.replace(cfg, **overrides["cfg_replace"])
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    rt = dict(RUNTIME.get(arch, {}))
+    rt.update(overrides)
+    rules = make_rules(mesh,
+                       seq_parallel=rt.get("seq_parallel", True))
+    schema = model_schema(cfg)
+    info = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+            "kind": shape.kind, "params": param_count(schema),
+            "n_devices": mesh.size, "runtime": {
+                k: v for k, v in rt.items() if not callable(v)}}
+
+    with mesh, act_rules(rules):
+        if shape.kind == "train":
+            n_micro = int(rt.get("n_micro", 1))
+            while shape.global_batch % n_micro:
+                n_micro //= 2
+            tc = TrainConfig(
+                opt=OptConfig(
+                    moment_dtype=rt.get("moment_dtype", "float32")),
+                n_micro=n_micro,
+                grad_dtype=rt.get("grad_dtype", "float32"))
+            info["runtime"]["n_micro"] = n_micro
+            step = make_train_step(cfg, tc)
+            state = abstract_state(cfg, tc)
+            batch = batch_specs(cfg, shape, train=True)
+            sspec = state_pspecs(schema, rules)
+            bspec = batch_pspecs(batch, rules)
+            jfn = jax.jit(step,
+                          in_shardings=(named(mesh, sspec),
+                                        named(mesh, bspec)),
+                          donate_argnums=(0,))
+            lowered = jfn.lower(state, batch)
+        elif shape.kind == "prefill":
+            pf = make_prefill_step(cfg, max_len=shape.seq_len
+                                   + cfg.num_prefix)
+            params = abstract_params(schema, dtype=jnp.bfloat16)
+            batch = batch_specs(cfg, shape, train=False)
+            pspec = pspecs(schema, rules)
+            bspec = batch_pspecs(batch, rules)
+            jfn = jax.jit(pf, in_shardings=(named(mesh, pspec),
+                                            named(mesh, bspec)))
+            lowered = jfn.lower(params, batch)
+        else:  # decode
+            params = abstract_params(schema, dtype=jnp.bfloat16)
+            pspec = pspecs(schema, rules)
+            deq = None
+            if rt.get("quant"):
+                # HOBFLOPS bitplane weights: the paper's technique as
+                # the decode memory-bandwidth lever.
+                from repro.quant.apply import (abstract_quantize_params,
+                                               make_deq,
+                                               quantized_pspecs)
+                params = abstract_quantize_params(params, cfg,
+                                                  rt["quant"])
+                pspec = quantized_pspecs(pspec, params)
+                deq = make_deq()
+            serve = make_decode_step(cfg, deq=deq)
+            specs = decode_specs(cfg, shape)
+            tok_spec = logical_spec(rules, "batch",
+                                    dims=(shape.global_batch,))
+            cspec = cache_pspecs(specs["cache"], rules)
+            jfn = jax.jit(
+                serve,
+                in_shardings=(named(mesh, pspec),
+                              named(mesh, tok_spec),
+                              named(mesh, jax.sharding.PartitionSpec()),
+                              named(mesh, cspec)),
+                donate_argnums=(3,))
+            lowered = jfn.lower(params, specs["token"], specs["pos"],
+                                specs["cache"])
+    return lowered, info
+
+
+def roofline_terms(cost: dict, mesh_kind: str) -> dict:
+    """Seconds per step, per chip, for the three roofline terms."""
+    t_c = cost["flops"] / PEAK_FLOPS
+    t_m = cost["bytes"] / HBM_BW
+    # 2D torus, 4 links usable per chip for in-pod collectives.
+    t_l = cost["coll_bytes"] / (4 * LINK_BW)
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_l, "collective"))
+    return {"compute_s": t_c, "memory_s": t_m, "collective_s": t_l,
+            "dominant": dom[1],
+            "step_s_max": max(t_c, t_m, t_l),
+            "step_s_sum": t_c + t_m + t_l}
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
+             overrides: dict | None = None, tag: str = "") -> dict:
+    out = pathlib.Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    fname = out / f"{arch}__{shape_name}__{mesh_kind}{tag}.json"
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    okay, reason = shape_applicable(cfg, shape)
+    if not okay:
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+               "status": "skip", "reason": reason}
+        fname.write_text(json.dumps(rec, indent=1))
+        print(f"SKIP  {arch} {shape_name} {mesh_kind}: {reason}",
+              flush=True)
+        return rec
+
+    t0 = time.time()
+    try:
+        lowered, info = build_lowered(arch, shape_name, mesh_kind,
+                                      overrides)
+        t_lower = time.time() - t0
+        t1 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t1
+        mem = compiled.memory_analysis()
+        mem_rec = {}
+        for field in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "alias_size_in_bytes",
+                      "generated_code_size_in_bytes"):
+            v = getattr(mem, field, None)
+            if v is not None:
+                mem_rec[field] = int(v)
+        ca = compiled.cost_analysis()
+        if isinstance(ca, list):
+            ca = ca[0] if ca else {}
+        xla_cost = {k: float(v) for k, v in dict(ca or {}).items()
+                    if isinstance(v, (int, float)) and k in
+                    ("flops", "bytes accessed", "transcendentals",
+                     "optimal_seconds")}
+        cost = hlo_cost.analyze_compiled(compiled)
+        rec = dict(info)
+        rec.update({
+            "status": "ok",
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "memory_analysis": mem_rec,
+            "xla_cost_analysis_loop_once": xla_cost,
+            "hlo_cost": cost,
+            "roofline": roofline_terms(cost, mesh_kind),
+        })
+    except Exception as e:  # record the failure; the matrix keeps going
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+               "status": "error", "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-4000:]}
+    fname.write_text(json.dumps(rec, indent=1))
+    status = rec["status"]
+    extra = ""
+    if status == "ok":
+        r = rec["roofline"]
+        extra = (f"compile={rec['compile_s']}s "
+                 f"dom={r['dominant']} step={r['step_s_max']:.4f}s "
+                 f"temp={rec['memory_analysis'].get('temp_size_in_bytes', 0)/2**30:.2f}GiB")
+    else:
+        extra = rec.get("error", "")[:200]
+    print(f"{status.upper():5s} {arch} {shape_name} {mesh_kind} {extra}",
+          flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    archs = ARCH_NAMES if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) \
+        else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                run_cell(arch, shape, mesh_kind, args.out)
+
+
+if __name__ == "__main__":
+    main()

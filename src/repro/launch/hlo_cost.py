@@ -1,0 +1,485 @@
+"""Loop-aware cost analysis over compiled HLO text.
+
+``compiled.cost_analysis()`` visits every ``while`` body exactly once,
+so any scanned program (all of ours: layers, microbatches, flash
+blocks, SSD chunks) is undercounted by the trip count.  XLA's CPU/TPU
+pipelines annotate ``backend_config={"known_trip_count":{"n":...}}`` on
+while ops after loop analysis; this module re-walks the HLO text and
+multiplies each computation's cost by the enclosing trip counts.
+
+Per top-level instruction we account:
+
+  flops      — 2·M·N·K for dots (batch dims folded into the output
+               product), element counts for elementwise/reduce work
+  bytes      — operand + output bytes (the post-fusion "bytes accessed"
+               model); dynamic-slice/DUS/gather/scatter count the moved
+               window, not the resident buffer
+  coll_bytes — Σ operand bytes of all-reduce / all-gather /
+               reduce-scatter / all-to-all / collective-permute (+
+               their async -start forms), i.e. per-chip link traffic
+
+The module is post-SPMD-partitioning, so every figure is *per chip*.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3": 1, "f8e3m4": 1, "f8e4m3b11fnuz": 1, "f8e5m2fnuz": 1,
+    "f8e8m0fnu": 1, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "collective-broadcast",
+                "ragged-all-to-all")
+_SKIP_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+             "bitcast", "after-all", "partition-id", "replica-id",
+             "opt-barrier", "domain", "add-dependency"}
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_hist: dict | None = None
+    unknown_trip_loops: int = 0
+    # bytes moved by standalone bf16<->f32 converts: the XLA *CPU*
+    # backend legalizes bf16 compute by materializing f32 copies; a TPU
+    # lowering computes bf16 natively, so this slice of the memory term
+    # is a host-backend artifact (reported separately, never subtracted
+    # silently).
+    convert_bytes: float = 0.0
+
+    def __post_init__(self):
+        if self.coll_hist is None:
+            self.coll_hist = {}
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.coll_bytes += other.coll_bytes * mult
+        for k, v in other.coll_hist.items():
+            self.coll_hist[k] = self.coll_hist.get(k, 0.0) + v * mult
+        self.unknown_trip_loops += other.unknown_trip_loops
+        self.convert_bytes += other.convert_bytes * mult
+
+
+def _shape_bytes(text: str) -> float:
+    """Total bytes of every dtype[dims] group in `text` (tuples sum)."""
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_elems(text: str) -> float:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shape: str          # output shape text (may be a tuple)
+    opcode: str
+    operands: list[str]
+    attrs: str
+
+
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT )?%?([\w.\-]+) = (\([^=]*?\)|\S+) ([\w\-]+)\((.*)$")
+
+
+def _parse_operands(argstr: str) -> tuple[list[str], str]:
+    """Split the top-level args of `op(...)`; returns (operand names,
+    trailing attr text)."""
+    depth = 0
+    args, cur = [], []
+    i = 0
+    for i, ch in enumerate(argstr):
+        if ch in "([{":
+            depth += 1
+            cur.append(ch)
+        elif ch in ")]}":
+            if depth == 0:
+                args.append("".join(cur))
+                break
+            depth -= 1
+            cur.append(ch)
+        elif ch == "," and depth == 0:
+            args.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    names = []
+    for a in args:
+        a = a.strip()
+        m = re.search(r"%([\w.\-]+)\s*$", a)
+        names.append(m.group(1) if m else a)
+    return names, argstr[i + 1:]
+
+
+def parse_computations(hlo: str) -> dict[str, list[Instr]]:
+    comps: dict[str, list[Instr]] = {}
+    cur: list[Instr] | None = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        m = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*{$", stripped)
+        if m and not stripped.startswith("ROOT") and "=" not in \
+                stripped.split("(")[0]:
+            cur = comps.setdefault(m.group(1), [])
+            if stripped.startswith("ENTRY") or line.startswith("ENTRY"):
+                comps["__entry__"] = cur
+            continue
+        if stripped == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        # XLA prints /*index=N*/ comments inside large tuple shapes.
+        line = re.sub(r"/\*.*?\*/", "", line)
+        mi = _INSTR_RE.match(line)
+        if mi is None:
+            continue
+        name, shape, opcode, rest = mi.groups()
+        operands, attrs = _parse_operands(rest)
+        cur.append(Instr(name, shape, opcode, operands, attrs))
+    return comps
+
+
+def _trip_count(attrs: str) -> int | None:
+    m = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', attrs)
+    return int(m.group(1)) if m else None
+
+
+def _dot_flops(instr: Instr, shapes: dict[str, str]) -> float:
+    out_elems = _shape_elems(instr.shape)
+    lhs = shapes.get(instr.operands[0], "")
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.attrs)
+    contract = 1
+    sm = _SHAPE_RE.search(lhs)
+    if m and sm:
+        dims = [int(d) for d in sm.group(2).split(",") if d]
+        for idx in (int(i) for i in m.group(1).split(",") if i):
+            if idx < len(dims):
+                contract *= dims[idx]
+    return 2.0 * out_elems * contract
+
+
+def _conv_flops(instr: Instr, shapes: dict[str, str]) -> float:
+    out_elems = _shape_elems(instr.shape)
+    rhs = shapes.get(instr.operands[1], "") if len(instr.operands) > 1 else ""
+    sm = _SHAPE_RE.search(rhs)
+    kernel = 1
+    if sm:
+        for d in sm.group(2).split(","):
+            if d:
+                kernel *= int(d)
+        out_sm = _SHAPE_RE.search(instr.shape)
+        if out_sm:
+            o = [int(d) for d in out_sm.group(2).split(",") if d]
+            kernel //= max(o[-1] if o else 1, 1) or 1
+    return 2.0 * out_elems * max(kernel, 1)
+
+
+def _fusion_bytes(called: list, fusion_instr, outer_shapes,
+                  out_bytes: float) -> float:
+    """Alias-aware traffic of one fusion instruction.
+
+    Scan programs are made of fusions whose parameters are only *sliced*
+    (xs reads: dynamic-slice of the stacked buffer) or *aliased through
+    a dynamic-update-slice root* (ys writes / donated in-place updates).
+    Counting full parameter buffers there overstates HBM traffic by the
+    trip count; instead:
+
+      param used only by dynamic-slice/slice -> 2 x slice bytes
+      param aliased into the root DUS       -> 2 x update bytes
+      anything else                          -> full parameter bytes
+    Output: counted unless the root DUS aliases a parameter (in-place).
+    """
+    if not called:
+        return out_bytes
+    inner_shapes = {i.name: i.shape for i in called}
+    uses: dict[str, list] = {}
+    for i in called:
+        for o in i.operands:
+            uses.setdefault(o, []).append(i)
+    root = called[-1]
+
+    # which inner value feeds the root DUS target (operand 0), following
+    # bitcast/copy chains
+    aliased_params: set[str] = set()
+    root_is_dus = root.opcode == "dynamic-update-slice"
+    dus_update_bytes = 0.0
+    if root_is_dus:
+        dus_update_bytes = _shape_bytes(
+            inner_shapes.get(root.operands[1], "")) if len(
+                root.operands) > 1 else 0.0
+        tgt = root.operands[0] if root.operands else None
+        seen = set()
+        while tgt and tgt not in seen:
+            seen.add(tgt)
+            instr = next((i for i in called if i.name == tgt), None)
+            if instr is None:
+                break
+            if instr.opcode == "parameter":
+                aliased_params.add(instr.name)
+                break
+            if instr.opcode in ("bitcast", "copy", "convert") \
+                    and instr.operands:
+                tgt = instr.operands[0]
+            else:
+                break
+
+    total = 0.0
+    for pname in (i.name for i in called if i.opcode == "parameter"):
+        if pname in aliased_params:
+            total += 2.0 * dus_update_bytes
+            continue
+        puses = uses.get(pname, [])
+        if puses and all(u.opcode in ("dynamic-slice", "slice")
+                         for u in puses):
+            total += sum(2.0 * _shape_bytes(inner_shapes.get(u.name, ""))
+                         for u in puses)
+        else:
+            total += _shape_bytes(inner_shapes.get(pname, ""))
+    if root_is_dus and aliased_params:
+        pass          # in-place: write already counted with the update
+    else:
+        total += out_bytes
+    return total
+
+
+def analyze(hlo: str) -> Cost:
+    comps = parse_computations(hlo)
+    shapes_of: dict[str, dict[str, str]] = {
+        cname: {i.name: i.shape for i in instrs}
+        for cname, instrs in comps.items()}
+    memo: dict[str, Cost] = {}
+    in_progress: set[str] = set()
+
+    def comp_cost(cname: str) -> Cost:
+        if cname in memo:
+            return memo[cname]
+        if cname in in_progress or cname not in comps:
+            return Cost()
+        in_progress.add(cname)
+        total = Cost()
+        shapes = shapes_of[cname]
+        for instr in comps[cname]:
+            total.add(instr_cost(instr, shapes))
+        in_progress.discard(cname)
+        memo[cname] = total
+        return total
+
+    def instr_cost(instr: Instr, shapes: dict[str, str]) -> Cost:
+        c = Cost()
+        op = instr.opcode
+        if op in _SKIP_OPS:
+            return c
+        out_bytes = _shape_bytes(instr.shape)
+        opd_bytes = sum(_shape_bytes(shapes.get(o, "")) for o in
+                        instr.operands)
+
+        if op == "while":
+            body = re.search(r"body=%?([\w.\-]+)", instr.attrs)
+            cond = re.search(r"condition=%?([\w.\-]+)", instr.attrs)
+            trip = _trip_count(instr.attrs)
+            inner = Cost()
+            if body:
+                inner.add(comp_cost(body.group(1)))
+            if cond:
+                inner.add(comp_cost(cond.group(1)))
+            if trip is None:
+                trip = 1
+                c.unknown_trip_loops += 1
+            c.add(inner, float(trip))
+            return c
+        if op == "conditional":
+            branches = re.findall(r"(?:branch_computations=\{([^}]*)\}|"
+                                  r"true_computation=%?([\w.\-]+)|"
+                                  r"false_computation=%?([\w.\-]+))",
+                                  instr.attrs)
+            names: list[str] = []
+            for tup in branches:
+                for t in tup:
+                    if t:
+                        names.extend(n.strip().lstrip("%")
+                                     for n in t.split(","))
+            if names:
+                worst = max((comp_cost(n) for n in names),
+                            key=lambda cc: cc.flops + cc.bytes)
+                c.add(worst)
+            c.bytes += out_bytes
+            return c
+        if op == "call":
+            # Inlined-by-name computation (remat/jvp "closed_call"):
+            # its body ops are real top-level work — take the full cost,
+            # and none at the (virtual) call boundary.
+            m = re.search(r"to_apply=%?([\w.\-]+)", instr.attrs)
+            if m:
+                c.add(comp_cost(m.group(1)))
+            return c
+        if op in ("fusion", "async-start"):
+            m = re.search(r"calls=%?([\w.\-]+)", instr.attrs)
+            if m:
+                inner = comp_cost(m.group(1))
+                c.flops += inner.flops
+                c.coll_bytes += inner.coll_bytes
+                for k, v in inner.coll_hist.items():
+                    c.coll_hist[k] = c.coll_hist.get(k, 0.0) + v
+                c.unknown_trip_loops += inner.unknown_trip_loops
+                c.bytes += _fusion_bytes(comps.get(m.group(1), []),
+                                         instr, shapes, out_bytes)
+            else:
+                c.bytes += opd_bytes + out_bytes
+            return c
+
+        base = op.removesuffix("-start")
+        if base in _COLLECTIVES:
+            moved = opd_bytes
+            c.coll_bytes += moved
+            c.coll_hist[base] = c.coll_hist.get(base, 0.0) + moved
+            c.bytes += opd_bytes + out_bytes
+            return c
+        if op in ("all-reduce-done", "all-gather-done",
+                  "collective-permute-done", "async-done", "async-update",
+                  "copy-start", "copy-done", "send", "recv", "send-done",
+                  "recv-done"):
+            return c
+
+        if op == "dot":
+            c.flops += _dot_flops(instr, shapes)
+            c.bytes += opd_bytes + out_bytes
+            return c
+        if op == "convolution":
+            c.flops += _conv_flops(instr, shapes)
+            c.bytes += opd_bytes + out_bytes
+            return c
+        if op in ("dynamic-slice", "gather"):
+            c.bytes += 2.0 * out_bytes
+            return c
+        if op == "dynamic-update-slice":
+            upd = (_shape_bytes(shapes.get(instr.operands[1], ""))
+                   if len(instr.operands) > 1 else out_bytes)
+            c.bytes += 2.0 * upd
+            return c
+        if op == "scatter":
+            upd = (_shape_bytes(shapes.get(instr.operands[-1], ""))
+                   if instr.operands else out_bytes)
+            c.bytes += 3.0 * upd + out_bytes
+            c.flops += _shape_elems(instr.shape)
+            return c
+        if op in ("reduce", "reduce-window"):
+            c.flops += sum(_shape_elems(shapes.get(o, ""))
+                           for o in instr.operands)
+            c.bytes += opd_bytes + out_bytes
+            return c
+        if op == "sort":
+            n = _shape_elems(instr.shape)
+            c.flops += n * max(n, 2).bit_length()
+            c.bytes += opd_bytes + out_bytes
+            return c
+
+        # generic elementwise / data movement
+        if op == "convert":
+            in_t = shapes.get(instr.operands[0], "") if instr.operands \
+                else ""
+            pair = {m.group(1) for m in
+                    ( _SHAPE_RE.search(t) for t in (in_t, instr.shape))
+                    if m}
+            if pair == {"bf16", "f32"}:
+                c.convert_bytes += opd_bytes + out_bytes
+        c.flops += _shape_elems(instr.shape)
+        c.bytes += opd_bytes + out_bytes
+        return c
+
+    entry = "__entry__" if "__entry__" in comps else next(iter(comps))
+    return comp_cost(entry)
+
+
+def analyze_compiled(compiled) -> dict:
+    """Cost dict (per chip) for a jax compiled object."""
+    cost = analyze(compiled.as_text())
+    return {
+        "flops": cost.flops,
+        "bytes": cost.bytes,
+        "coll_bytes": cost.coll_bytes,
+        "coll_hist": cost.coll_hist,
+        "unknown_trip_loops": cost.unknown_trip_loops,
+        "cpu_bf16_convert_bytes": cost.convert_bytes,
+    }
+
+
+def top_contributors(hlo: str, n: int = 20):
+    """Top-n instructions by bytes x enclosing-loop trips (debugging /
+    hillclimbing aid).  Returns [(bytes_total, trips, opcode, name,
+    shape<=120ch)]."""
+    comps = parse_computations(hlo)
+    shapes_of = {c: {i.name: i.shape for i in instrs}
+                 for c, instrs in comps.items()}
+
+    # map computation -> multiplier (product of trips of enclosing whiles)
+    mult: dict[str, float] = {}
+
+    def mark(cname: str, m: float):
+        if cname not in comps:
+            return
+        mult[cname] = mult.get(cname, 0.0) + m
+        for instr in comps[cname]:
+            if instr.opcode == "while":
+                body = re.search(r"body=%?([\w.\-]+)", instr.attrs)
+                cond = re.search(r"condition=%?([\w.\-]+)", instr.attrs)
+                trip = _trip_count(instr.attrs) or 1
+                for mm in (body, cond):
+                    if mm:
+                        mark(mm.group(1), m * trip)
+            else:
+                for attr in ("calls", "to_apply"):
+                    mm = re.search(attr + r"=%?([\w.\-]+)", instr.attrs)
+                    if mm and instr.opcode in ("fusion", "call",
+                                               "async-start"):
+                        mark(mm.group(1), m)
+
+    entry = "__entry__" if "__entry__" in comps else next(iter(comps))
+    mark(entry, 1.0)
+
+    rows = []
+    for cname, instrs in comps.items():
+        m = mult.get(cname, 0.0)
+        if m <= 0:
+            continue
+        shapes = shapes_of[cname]
+        for i in instrs:
+            if i.opcode in _SKIP_OPS or i.opcode in ("while",):
+                continue
+            b = (_shape_bytes(i.shape)
+                 + sum(_shape_bytes(shapes.get(o, ""))
+                       for o in i.operands))
+            if i.opcode in ("dynamic-slice", "gather"):
+                b = 2 * _shape_bytes(i.shape)
+            rows.append((b * m, m, i.opcode, f"{cname}/{i.name}",
+                         i.shape[:120]))
+    rows.sort(reverse=True)
+    return rows[:n]

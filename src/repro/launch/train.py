@@ -1,0 +1,120 @@
+"""Training launcher: data -> step -> metrics -> checkpoint -> heartbeat.
+
+Runs anywhere: full configs on a production mesh, or ``--smoke`` on
+this container's CPU device.  Restart-safe by construction — on start
+it restores the newest complete checkpoint (if any) and the synthetic
+data pipeline replays from the restored step.  ``--kill-at`` simulates
+a mid-run crash for the fault-tolerance tests/examples.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config, smoke_config
+from repro.data.pipeline import SyntheticLM, make_batch
+from repro.distributed.sharding import batch_pspecs, named, state_pspecs
+from repro.ft import Heartbeat, StragglerMonitor
+from repro.launch.mesh import host_mesh
+from repro.models import model_schema
+from repro.models.config import ShapeConfig
+from repro.models.schema import make_rules
+from repro.optim import OptConfig
+from repro.train.step import TrainConfig, init_state, make_train_step
+
+
+def train_loop(cfg, shape, *, steps: int, tc: TrainConfig | None = None,
+               ckpt_dir: str | None = None, ckpt_every: int = 50,
+               hb_dir: str | None = None, host: str = "host0",
+               mesh=None, seed: int = 0, kill_at: int | None = None,
+               log_every: int = 10, print_fn=print):
+    """Returns (final_state, losses)."""
+    tc = tc or TrainConfig(opt=OptConfig(warmup_steps=20,
+                                         total_steps=steps))
+    mesh = mesh or host_mesh()
+    rules = make_rules(mesh)
+    schema = model_schema(cfg)
+    sspecs = named(mesh, state_pspecs(schema, rules))
+
+    ds = SyntheticLM(
+        vocab=cfg.vocab, seq_len=shape.seq_len,
+        global_batch=shape.global_batch, seed=seed,
+        num_prefix=cfg.num_prefix if cfg.family != "encdec" else 0,
+        frontend_dim=cfg.frontend_dim, frames=cfg.family == "encdec")
+
+    mgr = CheckpointManager(ckpt_dir) if ckpt_dir else None
+    hb = Heartbeat(hb_dir, host) if hb_dir else None
+    mon = StragglerMonitor()
+
+    with mesh:
+        step_fn = jax.jit(make_train_step(cfg, tc), donate_argnums=(0,))
+        start = 0
+        state = None
+        if mgr is not None:
+            import jax.numpy as jnp
+            from repro.train.step import abstract_state
+            restored_step, restored = mgr.restore_latest(
+                abstract_state(cfg, tc), sspecs)
+            if restored is not None:
+                state, start = restored, restored_step + 1
+                print_fn(f"[train] restored checkpoint step "
+                         f"{restored_step}; resuming at {start}")
+        if state is None:
+            state = init_state(cfg, tc, jax.random.PRNGKey(seed))
+            state = jax.device_put(state, sspecs)
+
+        losses = []
+        for step in range(start, steps):
+            t0 = time.time()
+            batch = make_batch(ds, step)
+            bspecs = named(mesh, batch_pspecs(batch, rules))
+            batch = jax.device_put(batch, bspecs)
+            state, metrics = step_fn(state, batch)
+            loss = float(metrics["loss"])
+            losses.append(loss)
+            dt = time.time() - t0
+            mon.observe(host, dt)
+            if hb is not None:
+                hb.beat(step, dt)
+            if step % log_every == 0 or step == steps - 1:
+                print_fn(f"[train] step {step:5d} loss {loss:.4f} "
+                         f"gnorm {float(metrics['grad_norm']):.3f} "
+                         f"lr {float(metrics['lr']):.2e} {dt:.2f}s")
+            if mgr is not None and (step + 1) % ckpt_every == 0:
+                mgr.save(step, state)
+            if kill_at is not None and step >= kill_at:
+                print_fn(f"[train] simulated crash at step {step}")
+                if mgr is not None:
+                    mgr.wait()
+                return state, losses
+        if mgr is not None:
+            mgr.save(steps - 1, state, block=True)
+    return state, losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--hb-dir", default=None)
+    ap.add_argument("--kill-at", type=int, default=None)
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    shape = ShapeConfig("cli", args.seq, args.batch, "train")
+    train_loop(cfg, shape, steps=args.steps, ckpt_dir=args.ckpt_dir,
+               hb_dir=args.hb_dir, kill_at=args.kill_at)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,240 @@
+"""GQA/MQA attention: flash-style chunked training path + cached decode.
+
+Training/prefill never materializes the [S, S] score matrix: an outer
+scan over query blocks and an inner scan over KV blocks carry the
+running (max, denominator, accumulator) triple — the standard
+memory-roofline-friendly formulation.  Causality is enforced by masking
+inside the scan (rectangular iteration; the triangular-dispatch variant
+is a §Perf hillclimb, see EXPERIMENTS.md).
+
+Decode attends one query against a pre-allocated KV cache with a length
+mask; the cache sequence axis may be sharded (long-context decode) —
+GSPMD turns the row-softmax into a partial-softmax + all-reduce
+combine, i.e. flash-decode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.ctx import constrain
+
+from .config import ModelConfig
+from .layers import apply_rope, rmsnorm, rope_angles
+from .schema import P
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Schema
+# ---------------------------------------------------------------------------
+def attn_schema(cfg: ModelConfig):
+    d, hq, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    s = {"wq": P((d, hq * dh), ("embed", "qheads")),
+         "wk": P((d, hkv * dh), ("embed", "kvheads")),
+         "wv": P((d, hkv * dh), ("embed", "kvheads")),
+         "wo": P((hq * dh, d), ("qheads", "embed"))}
+    if cfg.qkv_bias:
+        s["bq"] = P((hq * dh,), ("qheads",), "zeros")
+        s["bk"] = P((hkv * dh,), ("kvheads",), "zeros")
+        s["bv"] = P((hkv * dh,), ("kvheads",), "zeros")
+    if cfg.qk_norm:
+        s["q_norm"] = P((dh,), (None,), "ones")
+        s["k_norm"] = P((dh,), (None,), "ones")
+    return s
+
+
+def _project_qkv(p, x, cfg: ModelConfig, positions, deq=None):
+    """x [B,T,d] -> q [B,T,Hq,D], k/v [B,T,Hkv,D] (roped, normed)."""
+    get = (lambda n: p[n]) if deq is None else (lambda n: deq(n, p[n]))
+    B, T, _ = x.shape
+    dh = cfg.head_dim
+    q = x @ get("wq").astype(x.dtype)
+    k = x @ get("wk").astype(x.dtype)
+    v = x @ get("wv").astype(x.dtype)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = constrain(q.reshape(B, T, cfg.n_heads, dh),
+                  "batch", None, "qheads", None)
+    k = constrain(k.reshape(B, T, cfg.n_kv_heads, dh),
+                  "batch", None, "kvheads", None)
+    v = constrain(v.reshape(B, T, cfg.n_kv_heads, dh),
+                  "batch", None, "kvheads", None)
+    if cfg.qk_norm:
+        q = rmsnorm({"scale": p["q_norm"]}, q, cfg.norm_eps)
+        k = rmsnorm({"scale": p["k_norm"]}, k, cfg.norm_eps)
+    cos, sin = rope_angles(positions, dh, cfg.rope_theta)
+    cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+    return apply_rope(q, cos, sin), apply_rope(k, cos, sin), v
+
+
+# ---------------------------------------------------------------------------
+# Flash-style chunked attention (train / prefill)
+# ---------------------------------------------------------------------------
+def _flash(q, k, v, *, causal: bool, q_block: int, kv_block: int,
+           q_offset: int = 0):
+    """q [B,S,Hq,D], k/v [B,S,Hkv,D] -> [B,S,Hq,D].  Blockwise softmax.
+
+    Positions are derived from scalar block indices + in-loop iota, NOT
+    from precomputed position arrays passed as scan xs: constant array
+    xs trigger XLA's loop-invariant sinking, which materializes the
+    causal mask for every (q-block, kv-block) pair at once — observed
+    as a multi-GiB pred buffer carried through the while loop (see
+    EXPERIMENTS.md §Perf, iteration 0)."""
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    G = Hq // Hkv
+    scale = D ** -0.5
+    Tq, Tk = min(q_block, Sq), min(kv_block, Sk)
+    nq, nk = Sq // Tq, Sk // Tk
+    assert Sq % Tq == 0 and Sk % Tk == 0
+
+    # Anchor the blocked layouts: batch over data, kv-heads (and the
+    # grouped-query dim for GQA) over model.  Without these anchors
+    # GSPMD loses the sharding across the 6-D block reshapes and
+    # replicates the score tensors.
+    qb = constrain(q.reshape(B, nq, Tq, Hkv, G, D).astype(jnp.float32),
+                   "batch", None, None, "kvheads", "qgroups", None) * scale
+    kb = constrain(k.reshape(B, nk, Tk, Hkv, D).astype(jnp.float32),
+                   "batch", None, None, "kvheads", None)
+    vb = constrain(v.reshape(B, nk, Tk, Hkv, D).astype(jnp.float32),
+                   "batch", None, None, "kvheads", None)
+    iota_q = jax.lax.iota(jnp.int32, Tq)
+    iota_k = jax.lax.iota(jnp.int32, Tk)
+
+    def q_step(_, qi):
+        qcur, qidx = qi                     # [B,Tq,Hkv,G,D], scalar
+        qp = qidx * Tq + iota_q + q_offset  # [Tq]
+        m0 = constrain(jnp.full((B, Tq, Hkv, G), NEG_INF, jnp.float32),
+                       "batch", None, "kvheads", "qgroups")
+        l0 = constrain(jnp.zeros((B, Tq, Hkv, G), jnp.float32),
+                       "batch", None, "kvheads", "qgroups")
+        a0 = constrain(jnp.zeros((B, Tq, Hkv, G, D), jnp.float32),
+                       "batch", None, "kvheads", "qgroups", None)
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kcur, vcur, kidx = ki           # [B,Tk,Hkv,D], ..., scalar
+            s = jnp.einsum("btkgd,bukd->btkgu", qcur, kcur)
+            if causal:
+                kp = kidx * Tk + iota_k     # [Tk]
+                bias = jnp.where(qp[:, None] >= kp[None, :],
+                                 0.0, NEG_INF).astype(jnp.float32)
+                s = s + bias[None, :, None, None, :]
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = (acc * corr[..., None]
+                       + jnp.einsum("btkgu,bukd->btkgd", p, vcur))
+            return (m_new, l_new, acc_new), None
+
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0),
+             jax.lax.iota(jnp.int32, nk)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out
+
+    _, ob = jax.lax.scan(q_step, None,
+                         (jnp.moveaxis(qb, 1, 0),
+                          jax.lax.iota(jnp.int32, nq)))
+    out = jnp.moveaxis(ob, 0, 1).reshape(B, Sq, Hq, D)
+    return out.astype(q.dtype)
+
+
+def attention(p, x, cfg: ModelConfig, *, causal: bool = True,
+              q_block: int = 512, kv_block: int = 512, deq=None,
+              kv_override=None):
+    """Full attention over x (train/prefill).  Returns (out, (k, v)).
+
+    kv_override: (k, v) from an encoder (cross-attention); x only makes
+    queries then.
+    """
+    B, T, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(T), (B, T))
+    q, k, v = _project_qkv(p, x, cfg, positions, deq)
+    if kv_override is not None:
+        k, v = kv_override
+        causal = False
+    o = _flash(q, k, v, causal=causal, q_block=q_block, kv_block=kv_block)
+    get = (lambda n: p[n]) if deq is None else (lambda n: deq(n, p[n]))
+    out = o.reshape(B, T, -1) @ get("wo").astype(x.dtype)
+    return out, (k, v)
+
+
+# ---------------------------------------------------------------------------
+# Cached decode
+# ---------------------------------------------------------------------------
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, n_layers: int,
+                  dtype=jnp.bfloat16):
+    dh, hkv = cfg.head_dim, cfg.n_kv_heads
+    shape = (n_layers, batch, max_len, hkv, dh)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def decode_attention(p, x, cfg: ModelConfig, layer_cache, pos, deq=None,
+                     kv_override=None):
+    """One-token decode over a READ-ONLY cache.
+
+    x [B,1,d]; layer_cache {k,v}: [B,Smax,Hkv,D] holding tokens
+    0..pos-1; the current token attends to the cache plus an explicit
+    self term, and the fresh (k_new, v_new) are returned for a single
+    post-scan cache merge.  Writing the cache inside the layer scan is
+    what the first profile showed to be catastrophic: a dynamic-update-
+    slice at a data-dependent index on the sequence-SHARDED dim lowers
+    to a whole-buffer select per layer (full per-chip cache read+write
+    x n_layers, EXPERIMENTS.md §Perf iteration 2).
+    Returns (out [B,1,d], {"k_new","v_new"} [B,1,Hkv,D])."""
+    B = x.shape[0]
+    positions = jnp.broadcast_to(pos[None, None], (B, 1))
+    q, k_new, v_new = _project_qkv(p, x, cfg, positions, deq)
+
+    Hq, Hkv, D = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    G = Hq // Hkv
+    qf = q.reshape(B, Hkv, G, D).astype(jnp.float32) * D ** -0.5
+
+    if kv_override is None:
+        k, v = layer_cache["k"], layer_cache["v"]
+        valid = jnp.arange(k.shape[1]) < pos               # old tokens
+        cache_out = {"k_new": k_new, "v_new": v_new}
+    else:
+        k, v = kv_override
+        valid = jnp.ones((k.shape[1],), bool)
+        cache_out = {}
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    # Scores keep the cache's sequence sharding: the softmax over a
+    # "kvseq"-sharded axis lowers to partial softmax + combine
+    # collectives (flash-decode) under GSPMD.  The q-group dim is
+    # deliberately NOT sharded here: decode is memory-bound on the
+    # cache, and giving "model" to qgroups instead of kvseq made GSPMD
+    # all-gather the full cache every layer (§Perf iteration 4).
+    s = constrain(jnp.einsum("bkgd,bskd->bkgs", qf, kf),
+                  "batch", "kvheads", None, "kvseq")
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    if kv_override is None:
+        # Two-part flash-decode combine.  NOT a concat: concatenating
+        # the self term onto the kvseq-SHARDED score axis makes GSPMD
+        # all-gather the scores (and with them V) every layer (§Perf
+        # iteration 5).  Reductions over the sharded axis lower to
+        # partials + a tiny combine instead.
+        s_self = jnp.einsum("bkgd,bukd->bkgu", qf,
+                            k_new.astype(jnp.float32))   # [B,Hkv,G,1]
+        m = jnp.maximum(jnp.max(s, axis=-1, keepdims=True), s_self)
+        pw = jnp.exp(s - m)
+        p_self = jnp.exp(s_self - m)                     # [B,Hkv,G,1]
+        denom = jnp.sum(pw, axis=-1, keepdims=True) + p_self
+        o = (jnp.einsum("bkgs,bskd->bkgd", pw, vf)
+             + p_self * v_new.astype(jnp.float32)[:, 0][:, :, None])
+        o = o / denom
+    else:
+        o = jnp.einsum("bkgs,bskd->bkgd", jax.nn.softmax(s, axis=-1),
+                       vf)
+    o = o.reshape(B, 1, Hq * D)
+    get = (lambda n: p[n]) if deq is None else (lambda n: deq(n, p[n]))
+    out = o.astype(x.dtype) @ get("wo").astype(x.dtype)
+    return out, cache_out

@@ -1,0 +1,119 @@
+"""Core layers: norms, embeddings, rotary embedding, gated MLP, logits.
+
+All functions are pure; parameters arrive as dict subtrees produced by
+the schemas in :mod:`repro.models.schema`.  Weight matmuls optionally
+route through HOBFLOPS-quantized weights (``repro.quant``) — the paper's
+custom-precision FP as a first-class serving feature.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.ctx import constrain
+
+from .config import ModelConfig
+from .schema import P
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def rmsnorm_schema(d: int):
+    return {"scale": P((d,), ("embed",), "ones")}
+
+
+def rmsnorm(p, x, eps: float):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / logits
+# ---------------------------------------------------------------------------
+def embed_schema(cfg: ModelConfig):
+    return {"table": P((cfg.vocab_padded, cfg.d_model), ("vocab", "embed"),
+                       "normal", scale=1.0)}
+
+
+def embed(p, tokens, cfg: ModelConfig):
+    return jnp.take(p["table"], tokens, axis=0).astype(cfg.compute_dtype)
+
+
+def logits_schema(cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        return {}
+    return {"w": P((cfg.d_model, cfg.vocab_padded), ("embed", "vocab"))}
+
+
+def logits(p, x, cfg: ModelConfig, embed_params=None, deq=None):
+    if cfg.tie_embeddings:
+        w = embed_params["table"].T
+    else:
+        w = deq("w", p["w"]) if deq is not None else p["w"]
+    lg = jnp.einsum("bsd,dv->bsv", x, w.astype(x.dtype),
+                    preferred_element_type=jnp.float32)
+    return constrain(lg, "batch", None, "vocab")
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+def rope_angles(positions, d_head: int, theta: float):
+    """positions [...,] int -> (cos, sin) [..., d_head//2] f32."""
+    half = d_head // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x [..., S, H, D]; cos/sin broadcastable [..., S, 1, D//2]."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+def mlp_schema(cfg: ModelConfig, d_ff: int | None = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    return {"w_gate": P((d, f), ("embed", "mlp")),
+            "w_up": P((d, f), ("embed", "mlp")),
+            "w_down": P((f, d), ("mlp", "embed"))}
+
+
+def _act(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[name]
+
+
+def mlp(p, x, cfg: ModelConfig, deq=None):
+    """deq: optional weight-dequant hook (name, array) -> array, used by
+    the quantized serving path."""
+    get = (lambda n: p[n]) if deq is None else (lambda n: deq(n, p[n]))
+    h = _act(cfg.mlp_act)(x @ get("w_gate").astype(x.dtype))
+    h = constrain(h, "batch", None, "mlp")   # Megatron column-parallel
+    h = h * (x @ get("w_up").astype(x.dtype))
+    return h @ get("w_down").astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+def softmax_xent(lg, labels):
+    """lg [B,S,V] f32, labels [B,S] int.  Mean token cross-entropy.
+
+    The label pick is a one-hot multiply-reduce, NOT take_along_axis: a
+    gather over the model-sharded vocab axis forces GSPMD to replicate
+    the full f32 logits (observed: +160 GiB/device on the train cells),
+    while the one-hot form fuses into the reduce and partitions as a
+    partial-sum + psum over the vocab shards."""
+    lg = lg.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    onehot = jax.nn.one_hot(labels, lg.shape[-1], dtype=lg.dtype)
+    picked = jnp.sum(lg * onehot, axis=-1)
+    return jnp.mean(lse - picked)

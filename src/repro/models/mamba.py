@@ -1,0 +1,234 @@
+"""Mamba-2 (SSD, state-space duality) mixer: chunked train/prefill scan
+plus O(1)-per-token recurrent decode.
+
+The chunked algorithm is the quadratic-within-chunk / linear-across-chunk
+decomposition of arXiv:2405.21060 §6: intra-chunk outputs come from a
+masked (C Bᵀ ∘ L) X einsum that maps onto the MXU, inter-chunk state is
+carried by a short ``lax.scan`` over chunks.  All decays run in f32
+(exp of non-positive numbers — stable by construction).
+
+Logical shapes: d_inner = expand * d_model, H = d_inner / headdim P,
+state N = cfg.ssm_state, single B/C group (n_groups = 1).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.ctx import constrain
+
+from .config import ModelConfig
+from .layers import rmsnorm
+from .schema import P
+
+
+def mamba_schema(cfg: ModelConfig):
+    d, di, N, H = cfg.d_model, cfg.ssm_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_dim = di + 2 * N
+    d_in = 2 * di + 2 * N + H
+    return {
+        "in_proj": P((d, d_in), ("embed", "ssm")),
+        "conv_w": P((cfg.ssm_conv, conv_dim), (None, "ssm"), "normal",
+                    scale=0.5),
+        "conv_b": P((conv_dim,), ("ssm",), "zeros"),
+        "A_log": P((H,), (None,), "zeros"),      # A = -exp(A_log) = -1 init
+        "dt_bias": P((H,), (None,), "zeros"),
+        "D": P((H,), (None,), "ones"),
+        "norm": P((di,), ("ssm",), "ones"),
+        "out_proj": P((di, d), ("ssm", "embed")),
+    }
+
+
+def _segsum(x):
+    """x [..., Q] -> [..., Q, Q]; out[..., i, j] = sum_{j<k<=i} x_k for
+    i >= j, -inf above the diagonal (log-space decay matrix L)."""
+    Q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(xdt, dA, Bm, Cm, chunk: int, h0=None):
+    """Chunked SSD scan.
+
+    xdt [B,S,H,P] f32 (inputs pre-multiplied by dt), dA [B,S,H] f32
+    (dt * A, <= 0), Bm/Cm [B,S,N] f32.  Returns (y [B,S,H,P] f32,
+    h_final [B,H,P,N] f32).  S % chunk == 0.
+    """
+    B, S, H, Pd = xdt.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    if S % Q:
+        # Zero-pad to a chunk multiple: xdt=0 injects nothing, dA=0 means
+        # decay exp(0)=1, so the final state is exact; padded outputs are
+        # sliced off below.
+        pad = Q - S % Q
+        xdt = jnp.pad(xdt, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dA = jnp.pad(dA, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        y, h = ssd_chunked(xdt, dA, Bm, Cm, chunk, h0)
+        return y[:, :S], h
+    nc = S // Q
+
+    # Heads over "model" inside SSD (the chunk axis stays local: the
+    # inter-chunk recurrence is sequential).
+    xc = constrain(xdt.reshape(B, nc, Q, H, Pd),
+                   "batch", None, None, "ssm", None)
+    dAc = constrain(dA.reshape(B, nc, Q, H), "batch", None, None, "ssm")
+    Bc = Bm.reshape(B, nc, Q, N)
+    Cc = Cm.reshape(B, nc, Q, N)
+
+    cs = jnp.cumsum(dAc, axis=2)                       # [B,nc,Q,H]
+    # Intra-chunk (the "quadratic attention-like" branch).
+    L = jnp.exp(_segsum(jnp.moveaxis(dAc, -1, -2)))    # [B,nc,H,Q,Q]
+    scores = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc)     # [B,nc,Q,Q]
+    y_diag = jnp.einsum("bcqk,bchqk,bckhp->bcqhp", scores, L, xc)
+
+    # Per-chunk end states.
+    decay_states = jnp.exp(cs[:, :, -1:, :] - cs)      # [B,nc,Q,H]
+    states = jnp.einsum("bcqn,bcqh,bcqhp->bchpn", Bc, decay_states, xc)
+
+    # Inter-chunk recurrence.
+    chunk_decay = jnp.exp(cs[:, :, -1, :])             # [B,nc,H]
+    if h0 is None:
+        h0 = jnp.zeros((B, H, Pd, N), jnp.float32)
+
+    def step(h, inp):
+        st, dec = inp                                  # [B,H,P,N], [B,H]
+        h_prev = h
+        h = h * dec[:, :, None, None] + st
+        return h, h_prev
+
+    h_final, h_prevs = jax.lax.scan(
+        step, h0, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)              # [B,nc,H,P,N]
+
+    # Contribution of carried-in state to each position.
+    state_decay = jnp.exp(cs)                          # [B,nc,Q,H]
+    y_off = jnp.einsum("bcqn,bchpn,bcqh->bcqhp", Cc, h_prevs, state_decay)
+
+    y = (y_diag + y_off).reshape(B, S, H, Pd)
+    return y, h_final
+
+
+def _causal_conv(xBC, w, b):
+    """Depthwise causal conv1d.  xBC [B,S,D], w [K,D], b [D]."""
+    K = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    S = xBC.shape[1]
+    out = sum(pad[:, k:k + S, :] * w[k][None, None, :] for k in range(K))
+    return out + b[None, None, :]
+
+
+def mamba_init_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    di, N, H, Pd = (cfg.ssm_inner, cfg.ssm_state, cfg.ssm_heads,
+                    cfg.ssm_headdim)
+    conv_dim = di + 2 * N
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        "ssd": jnp.zeros((batch, H, Pd, N), jnp.float32),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt):
+    di, N, H = cfg.ssm_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_dim = di + 2 * N
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di:di + conv_dim]
+    dt = zxbcdt[..., di + conv_dim:]
+    assert dt.shape[-1] == H
+    return z, xBC, dt
+
+
+def _ssd_inputs(cfg: ModelConfig, p, xBC, dt):
+    """Post-conv xBC + raw dt -> f32 (x [.., H, P], dA, Bm, Cm, dt_sp)."""
+    di, N, H, Pd = (cfg.ssm_inner, cfg.ssm_state, cfg.ssm_heads,
+                    cfg.ssm_headdim)
+    x = xBC[..., :di].astype(jnp.float32)
+    Bm = xBC[..., di:di + N].astype(jnp.float32)
+    Cm = xBC[..., di + N:].astype(jnp.float32)
+    dt_sp = jax.nn.softplus(dt.astype(jnp.float32)
+                            + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))       # [H]
+    dA = dt_sp * A                                     # [..., H]
+    x = x.reshape(*x.shape[:-1], H, Pd)
+    return x, dA, Bm, Cm, dt_sp
+
+
+def mamba(p, x, cfg: ModelConfig, deq=None, h0=None):
+    """Full-sequence mixer.  x [B,S,d] -> (y [B,S,d], final_state)."""
+    get = (lambda n: p[n]) if deq is None else (lambda n: deq(n, p[n]))
+    B, S, d = x.shape
+    zxbcdt = constrain(x @ get("in_proj").astype(x.dtype),
+                       "batch", None, "ssm")
+    z, xBC_pre, dt = _split_proj(cfg, zxbcdt)
+    xBC = jax.nn.silu(_causal_conv(xBC_pre, p["conv_w"].astype(x.dtype),
+                                   p["conv_b"].astype(x.dtype)))
+    xs, dA, Bm, Cm, dt_sp = _ssd_inputs(cfg, p, xBC, dt)
+    xdt = xs * dt_sp[..., None]
+    ssd0 = None if h0 is None else h0["ssd"]
+    y, h_final = ssd_chunked(xdt, dA, Bm, Cm, cfg.ssm_chunk, ssd0)
+    y = y + p["D"].astype(jnp.float32)[None, None, :, None] * xs
+    y = y.reshape(B, S, cfg.ssm_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm({"scale": p["norm"]}, y, cfg.norm_eps)
+    out = y @ get("out_proj").astype(x.dtype)
+    # The decode conv window needs the last K-1 PRE-activation xBC rows.
+    K = cfg.ssm_conv
+    conv_state = xBC_pre[:, -(K - 1):, :] if S >= K - 1 else jnp.pad(
+        xBC_pre, ((0, 0), (K - 1 - S, 0), (0, 0)))
+    state = {"conv": conv_state, "ssd": h_final}
+    return out, state
+
+
+def mamba_decode(p, x, cfg: ModelConfig, state, deq=None):
+    """One-token recurrent step.  x [B,1,d] -> (y [B,1,d], new_state)."""
+    get = (lambda n: p[n]) if deq is None else (lambda n: deq(n, p[n]))
+    B = x.shape[0]
+    di, N, H, Pd = (cfg.ssm_inner, cfg.ssm_state, cfg.ssm_heads,
+                    cfg.ssm_headdim)
+    zxbcdt = x[:, 0, :] @ get("in_proj").astype(x.dtype)   # [B, d_in]
+    z, xBC_new, dt = _split_proj(cfg, zxbcdt)
+
+    # conv: window = [state | new]; state holds the previous K-1 pre-act
+    window = jnp.concatenate([state["conv"], xBC_new[:, None, :]], axis=1)
+    w = p["conv_w"].astype(x.dtype)                        # [K, D]
+    xBC = jnp.einsum("bkd,kd->bd", window, w) + p["conv_b"].astype(x.dtype)
+    xBC = jax.nn.silu(xBC)
+    new_conv = window[:, 1:, :]
+
+    xs, dA, Bm, Cm, dt_sp = _ssd_inputs(cfg, p, xBC, dt)   # x [B,H,P]
+    h = state["ssd"]                                       # [B,H,P,N]
+    dec = jnp.exp(dA)                                      # [B,H]
+    inj = jnp.einsum("bhp,bn->bhpn", xs * dt_sp[..., None], Bm)
+    h = h * dec[:, :, None, None] + inj
+    y = jnp.einsum("bn,bhpn->bhp", Cm, h)
+    y = y + p["D"].astype(jnp.float32)[None, :, None] * xs
+    y = y.reshape(B, di).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm({"scale": p["norm"]}, y, cfg.norm_eps)
+    out = (y @ get("out_proj").astype(x.dtype))[:, None, :]
+    return out, {"conv": new_conv, "ssd": h}
+
+
+# ---------------------------------------------------------------------------
+# Oracle for tests: naive per-step recurrence in f64-ish (f32) numpy space.
+# ---------------------------------------------------------------------------
+def ssd_reference(xdt, dA, Bm, Cm, h0=None):
+    """Sequential SSD recurrence (oracle).  Same signature as ssd_chunked
+    minus chunking."""
+    import numpy as np
+    xdt, dA, Bm, Cm = (np.asarray(a, np.float64) for a in (xdt, dA, Bm, Cm))
+    B, S, H, Pd = xdt.shape
+    N = Bm.shape[-1]
+    h = (np.zeros((B, H, Pd, N)) if h0 is None
+         else np.asarray(h0, np.float64))
+    ys = np.zeros((B, S, H, Pd))
+    for t in range(S):
+        dec = np.exp(dA[:, t])                         # [B,H]
+        h = h * dec[:, :, None, None] + np.einsum(
+            "bhp,bn->bhpn", xdt[:, t], Bm[:, t])
+        ys[:, t] = np.einsum("bn,bhpn->bhp", Cm[:, t], h)
+    return ys, h

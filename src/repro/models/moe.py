@@ -1,0 +1,148 @@
+"""Token-choice top-k MoE with sort-based (MegaBlocks-style) dispatch.
+
+The dispatch avoids the GShard [tokens, experts, capacity] one-hot tensor
+(which is infeasible at 1M-token global batches): assignments are sorted
+by expert id, ranked within their expert by a cumulative-count subtract,
+capacity-dropped, and scattered into a dense [E, C, d] buffer that the
+expert FFNs consume as one batched einsum.  Under GSPMD the scatter and
+gather lower to the all-to-all pair of a classic expert-parallel MoE
+when the `experts` logical axis maps to a mesh axis (olmoe 64e, jamba
+16e); when the expert count does not divide the mesh (grok 8e over a
+16-way "model" axis) the experts replicate and tensor parallelism falls
+back to the per-expert ``emlp`` axis — see schema.py rules.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.ctx import constrain
+
+from .config import ModelConfig
+from .layers import _act
+from .schema import P
+
+
+def moe_schema(cfg: ModelConfig, d_ff: int | None = None):
+    E, d, f = cfg.moe_experts, cfg.d_model, d_ff or cfg.d_ff
+    return {
+        "router": P((d, E), ("embed", None)),
+        "w_gate": P((E, d, f), ("experts", "embed", "emlp")),
+        "w_up": P((E, d, f), ("experts", "embed", "emlp")),
+        "w_down": P((E, f, d), ("experts", "emlp", "embed")),
+    }
+
+
+def _capacity(cfg: ModelConfig, T: int) -> int:
+    E, k = cfg.moe_experts, cfg.moe_top_k
+    c = int(cfg.moe_capacity_factor * T * k / E)
+    c = max(c, k, 8)
+    return min(-(-c // 8) * 8, T * k)  # pad to 8
+
+
+def moe(p, x, cfg: ModelConfig, d_ff: int | None = None, deq=None):
+    """x [B, S, d] -> (y [B, S, d], aux_loss scalar f32).
+
+    Grouped, GATHER-ONLY dispatch.  Routing/sorting happens per batch
+    row (the GShard "group"), every index op carries the batch dim, and
+    destination slots are filled by gathers through the sort
+    permutation — there is no scatter anywhere.  This matters under
+    GSPMD: a scatter-add into a sharded [tokens, d] buffer with
+    computed indices was lowered as replicate + mask + all-reduce
+    (17 GB of f32 all-reduce per layer per microbatch on the olmoe
+    train cell, EXPERIMENTS.md §Perf iteration 7); batched gathers with
+    matching batch sharding stay shard-local, and the one remaining
+    cross-expert gather (the combine) is the EP all-to-all equivalent.
+    """
+    get = (lambda n: p[n]) if deq is None else (lambda n: deq(n, p[n]))
+    B, S, d = x.shape
+    E, k = cfg.moe_experts, cfg.moe_top_k
+    C = _capacity(cfg, S)                                   # per group
+    A = S * k                                               # assignments
+
+    # Router in f32 (always).
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                 # [B,S,E]
+    gate, expert = jax.lax.top_k(probs, k)                  # [B,S,k]
+    gate = gate / jnp.maximum(jnp.sum(gate, -1, keepdims=True), 1e-9)
+
+    flat_e = expert.reshape(B, A)
+    flat_g = gate.reshape(B, A)
+    tok = (jnp.arange(A, dtype=jnp.int32) // k)             # [A]
+    order = jnp.argsort(flat_e, axis=-1)                    # [B,A] stable
+    st = jnp.take(tok, order)                               # token per pos
+    iperm = jnp.argsort(order, axis=-1)                     # inverse perm
+
+    # per-group expert counts / offsets (one-hot fuses into the reduce)
+    counts = jnp.sum(jax.nn.one_hot(flat_e, E, dtype=jnp.int32), axis=1)
+    offsets = jnp.cumsum(counts, axis=-1) - counts          # [B,E]
+
+    # ---- dispatch by gather: which sorted position fills slot (e, c)?
+    src_pos = offsets[:, :, None] + jnp.arange(C, dtype=jnp.int32)
+    slot_valid = jnp.arange(C)[None, None, :] < counts[:, :, None]
+    src_pos = jnp.clip(src_pos, 0, A - 1).reshape(B, E * C)
+    tok_for_slot = jnp.take_along_axis(st, src_pos, axis=-1)  # [B,E*C]
+    disp = jnp.take_along_axis(x, tok_for_slot[..., None], axis=1)
+    disp = disp * slot_valid.reshape(B, E * C, 1).astype(x.dtype)
+    disp = disp.reshape(B, E, C, d)
+    # batch over data, experts over model (EP): expert matmuls are
+    # fully local per (data, model) shard.
+    disp = constrain(disp, "batch", "experts", None, None)
+
+    # ---- expert FFN (batched over B and E) ---------------------------------
+    act = _act(cfg.mlp_act)
+    wg = get("w_gate").astype(x.dtype)
+    wu = get("w_up").astype(x.dtype)
+    wd = get("w_down").astype(x.dtype)
+    h = act(jnp.einsum("becd,edf->becf", disp, wg))
+    h = h * jnp.einsum("becd,edf->becf", disp, wu)
+    out_e = jnp.einsum("becf,efd->becd", h, wd)
+    # NB: sharding d_model here (hoping for a reduce-scatter epilogue on
+    # the non-EP/row-parallel case) was tried and refuted — GSPMD kept
+    # the all-reduce and added resharding traffic (§Perf iteration 9).
+    out_e = constrain(out_e, "batch", "experts", None, None)
+
+    # ---- combine by gather: slot of each assignment ------------------------
+    rank_sorted = (jnp.arange(A, dtype=jnp.int32)[None, :]
+                   - jnp.take_along_axis(
+                       offsets, jnp.take_along_axis(flat_e, order, -1),
+                       axis=-1))                            # [B,A]
+    rank_j = jnp.take_along_axis(rank_sorted, iperm, axis=-1)
+    keep_j = rank_j < C
+    slot_j = flat_e * C + jnp.where(keep_j, rank_j, 0)      # [B,A]
+    contrib = jnp.take_along_axis(
+        out_e.reshape(B, E * C, d), slot_j[..., None], axis=1)
+    w_assign = (flat_g * keep_j).astype(x.dtype)
+    y = jnp.sum((contrib * w_assign[..., None]).reshape(B, S, k, d),
+                axis=2)
+    y = constrain(y, "batch", None, None)
+
+    # Switch-style load-balance aux loss.
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(expert[..., 0], E, dtype=jnp.float32),
+        axis=(0, 1))
+    mean_prob = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(frac_tokens * mean_prob)
+    return y, aux
+
+
+def moe_dense_ref(p, x, cfg: ModelConfig, d_ff: int | None = None):
+    """No-drop dense reference: every expert computes every token.  Used
+    by tests to bound the dispatch path (equal when nothing is dropped)."""
+    B, S, d = x.shape
+    T = B * S
+    E, k = cfg.moe_experts, cfg.moe_top_k
+    xt = x.reshape(T, d)
+    logits = xt.astype(jnp.float32) @ p["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, expert = jax.lax.top_k(probs, k)
+    gate = gate / jnp.maximum(jnp.sum(gate, -1, keepdims=True), 1e-9)
+    act = _act(cfg.mlp_act)
+    h = act(jnp.einsum("td,edf->etf", xt, p["w_gate"].astype(xt.dtype)))
+    h = h * jnp.einsum("td,edf->etf", xt, p["w_up"].astype(xt.dtype))
+    out_e = jnp.einsum("etf,efd->etd", h, p["w_down"].astype(xt.dtype))
+    mask = jax.nn.one_hot(expert, E, dtype=jnp.float32)       # [T,k,E]
+    w = jnp.einsum("tk,tke->et", gate, mask).astype(xt.dtype)
+    y = jnp.einsum("etd,et->td", out_e, w)
+    return y.reshape(B, S, d)

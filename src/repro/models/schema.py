@@ -1,0 +1,176 @@
+"""Parameter schemas: one source of truth for shapes, init and sharding.
+
+A model describes its parameters as a nested dict of :class:`P` leaves
+(shape + logical axes + init rule).  From that single schema we derive:
+
+* ``init_params``      — materialized arrays (host; small configs only)
+* ``abstract_params``  — ``jax.ShapeDtypeStruct`` tree (dry-run: the 405B
+                         configs are never allocated)
+* ``pspecs``           — ``PartitionSpec`` tree via logical-axis rules
+                         with divisibility-aware fallback to replication
+
+Logical axes used by the model stack:
+
+  embed   d_model-sized dims         -> FSDP over the data(+pod) axes
+  vocab   (padded) vocabulary        -> "model"
+  qheads  fused n_heads*d_head       -> "model"
+  kvheads fused n_kv*d_head          -> "model" (replicated when too few)
+  mlp     d_ff                       -> "model"
+  experts MoE expert count           -> "model" (EP) when divisible
+  ssm     SSD inner features/heads   -> "model"
+  layers  scan-stacked leading dim   -> never sharded
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec
+
+Tree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class P:
+    shape: tuple[int, ...]
+    axes: tuple[Any, ...]          # logical name / None per dim
+    init: str = "normal"           # normal | zeros | ones
+    scale: float | None = None     # stddev for normal (default fan-in)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def stack(schema: Tree, n: int) -> Tree:
+    """Prepend an unsharded leading 'layers' dim of size n to every leaf."""
+    return jax.tree.map(
+        lambda p: P((n,) + p.shape, ("layers",) + p.axes, p.init, p.scale),
+        schema, is_leaf=lambda x: isinstance(x, P))
+
+
+def _leaf_init(p: P, key, dtype):
+    if p.init == "zeros":
+        return jnp.zeros(p.shape, dtype)
+    if p.init == "ones":
+        return jnp.ones(p.shape, dtype)
+    assert p.init == "normal", p.init
+    fan_in = p.shape[-2] if len(p.shape) >= 2 else p.shape[-1]
+    std = p.scale if p.scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+    return (std * jax.random.normal(key, p.shape, jnp.float32)).astype(dtype)
+
+
+def init_params(schema: Tree, key, dtype=jnp.float32) -> Tree:
+    leaves, treedef = jax.tree.flatten(
+        schema, is_leaf=lambda x: isinstance(x, P))
+    keys = jax.random.split(key, len(leaves))
+    vals = [_leaf_init(p, k, dtype) for p, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_params(schema: Tree, dtype=jnp.float32) -> Tree:
+    return jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, dtype),
+        schema, is_leaf=lambda x: isinstance(x, P))
+
+
+def param_count(schema: Tree) -> int:
+    leaves = jax.tree.leaves(schema, is_leaf=lambda x: isinstance(x, P))
+    return sum(math.prod(p.shape) for p in leaves)
+
+
+# ---------------------------------------------------------------------------
+# Sharding rules
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    """logical axis -> mesh axis (str, tuple, or candidate list).
+    ``sizes`` maps mesh axis name -> size for divisibility checks.
+    A list value holds fallback candidates tried in order (first whose
+    axes are unused and divide the dim wins)."""
+    table: dict
+    sizes: dict
+
+    def resolve(self, logical, dim: int, used=frozenset()):
+        cands = self.table.get(logical)
+        if cands is None:
+            return None
+        if not isinstance(cands, list):
+            cands = [cands]
+        for mesh_axes in cands:
+            group = ((mesh_axes,) if isinstance(mesh_axes, str)
+                     else tuple(mesh_axes))
+            if set(group) & set(used):
+                continue
+            total = math.prod(self.sizes[a] for a in group)
+            if dim % total == 0:
+                return mesh_axes
+        return None  # replicate rather than emit invalid sharding
+
+
+def pspecs(schema: Tree, rules: Rules) -> Tree:
+    def leaf(p: P):
+        spec = []
+        used = set()
+        for dim, ax in zip(p.shape, p.axes):
+            r = rules.resolve(ax, dim, used)
+            flat = ((r,) if isinstance(r, str) else tuple(r or ()))
+            if r is not None:
+                used |= set(flat)
+            spec.append(r)
+        return PartitionSpec(*spec)
+    return jax.tree.map(leaf, schema, is_leaf=lambda x: isinstance(x, P))
+
+
+def make_rules(mesh, *, fsdp: bool = True, seq_parallel: bool = True) -> Rules:
+    """Standard rule set for the production meshes (see DESIGN.md §4)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    data_axes = tuple(a for a in ("pod", "data") if a in sizes)
+    data = data_axes if len(data_axes) > 1 else data_axes[0]
+    table = {
+        "embed": data if fsdp else None,
+        "vocab": "model",
+        "qheads": "model",
+        "kvheads": "model",
+        "qgroups": "model",
+        "act_seq": "model" if seq_parallel else None,
+        "mlp": "model",
+        "experts": "model",
+        "emlp": "model",
+        "ssm": "model",
+        "batch": data,
+        # KV cache sequence axis: long-context decode (batch=1) takes the
+        # widest split; otherwise the leftover "model" axis (batch owns
+        # the data axes) — flash-decode partial-softmax via GSPMD.
+        "kvseq": [tuple(data_axes) + ("model",), ("model",)],
+        "layers": None,
+    }
+    return Rules(table, sizes)
+
+
+def logical_spec(rules: Rules, *axes, dims=None) -> PartitionSpec:
+    """PartitionSpec for an activation with the given logical axes.
+    ``dims`` (same length) enables divisibility checks when known."""
+    spec = []
+    used = set()
+    for i, ax in enumerate(axes):
+        if ax is None:
+            spec.append(None)
+            continue
+        d = None if dims is None else dims[i]
+        if d is not None:
+            r = rules.resolve(ax, d, used)
+        else:
+            r = rules.table.get(ax)
+            if isinstance(r, list):
+                r = r[0]
+            flat = ((r,) if isinstance(r, str) else tuple(r or ()))
+            if set(flat) & used:
+                r = None
+        flat = ((r,) if isinstance(r, str) else tuple(r or ()))
+        if r is not None:
+            used |= set(flat)
+        spec.append(r)
+    return PartitionSpec(*spec)

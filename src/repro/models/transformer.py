@@ -1,0 +1,341 @@
+"""Model assembly: decoder-only / hybrid / MoE / SSM / enc-dec / VLM.
+
+One code path serves all ten assigned architectures.  The layer stack is
+grouped into *super-layers* of ``cfg.scan_period()`` blocks (the smallest
+repeating pattern of (attention?, moe?) kinds) and iterated with
+``jax.lax.scan`` over parameters stacked along a leading depth axis —
+compile time stays flat in depth (llama3's 126 layers lower as one scan
+of 63 2-block bodies... actually its period is 1: one scanned block).
+Training bodies are rematerialized (``jax.checkpoint``).
+
+Caches (decode) and per-segment KV (prefill) travel through the same
+scan as xs/ys trees that mirror the block structure.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .attention import (attn_schema, attention, decode_attention)
+from .config import ModelConfig
+from .layers import (embed, embed_schema, logits, logits_schema, mlp,
+                     mlp_schema, rmsnorm, rmsnorm_schema, softmax_xent)
+from .mamba import (mamba, mamba_decode, mamba_init_state, mamba_schema)
+from .moe import moe, moe_schema
+from .schema import P, stack
+
+from repro.distributed.ctx import constrain
+
+Tree = Any
+
+
+# ---------------------------------------------------------------------------
+# Schemas
+# ---------------------------------------------------------------------------
+def block_schema(cfg: ModelConfig, kind: tuple[bool, bool],
+                 cross: bool = False) -> Tree:
+    is_attn, is_moe = kind
+    d = cfg.d_model
+    s: dict = {"pre_norm": rmsnorm_schema(d)}
+    if is_attn:
+        s["attn"] = attn_schema(cfg)
+    else:
+        s["mamba"] = mamba_schema(cfg)
+    if cross:
+        s["cross_norm"] = rmsnorm_schema(d)
+        s["cross"] = attn_schema(cfg)
+    if cfg.d_ff > 0:
+        s["mlp_norm"] = rmsnorm_schema(d)
+        s["moe" if is_moe else "mlp"] = (
+            moe_schema(cfg) if is_moe else mlp_schema(cfg))
+    return s
+
+
+def model_schema(cfg: ModelConfig) -> Tree:
+    period = cfg.scan_period()
+    depth = cfg.n_layers // period
+    kinds = cfg.layer_kinds()[:period]
+    cross = cfg.family == "encdec"
+    s: dict = {"embed": embed_schema(cfg)}
+    s["blocks"] = {f"b{k}": stack(block_schema(cfg, kinds[k], cross), depth)
+                   for k in range(period)}
+    s["final_norm"] = rmsnorm_schema(cfg.d_model)
+    s["logits"] = logits_schema(cfg)
+    if cfg.frontend != "none":
+        s["frontend"] = {"proj": P((cfg.frontend_dim, cfg.d_model),
+                                   (None, "embed"))}
+    if cfg.family == "encdec":
+        enc_kind = (True, False)
+        s["enc_blocks"] = {"e0": stack(block_schema(cfg, enc_kind),
+                                       cfg.enc_layers)}
+        s["enc_norm"] = rmsnorm_schema(cfg.d_model)
+    return s
+
+
+# ---------------------------------------------------------------------------
+# Cross attention (enc-dec): no RoPE, bidirectional over memory.
+# ---------------------------------------------------------------------------
+def _heads(cfg, q, k, v, B):
+    dh = cfg.head_dim
+    return (q.reshape(B, -1, cfg.n_heads, dh),
+            k.reshape(B, -1, cfg.n_kv_heads, dh),
+            v.reshape(B, -1, cfg.n_kv_heads, dh))
+
+
+def cross_kv(p, memory, cfg: ModelConfig, deq=None):
+    get = (lambda n: p[n]) if deq is None else (lambda n: deq(n, p[n]))
+    B = memory.shape[0]
+    k = memory @ get("wk").astype(memory.dtype)
+    v = memory @ get("wv").astype(memory.dtype)
+    dh = cfg.head_dim
+    return (k.reshape(B, -1, cfg.n_kv_heads, dh),
+            v.reshape(B, -1, cfg.n_kv_heads, dh))
+
+
+def cross_attention(p, x, kv, cfg: ModelConfig, deq=None):
+    """x [B,T,d] queries over precomputed memory (k, v)."""
+    from .attention import _flash
+    get = (lambda n: p[n]) if deq is None else (lambda n: deq(n, p[n]))
+    B, T, _ = x.shape
+    dh = cfg.head_dim
+    q = (x @ get("wq").astype(x.dtype)).reshape(B, T, cfg.n_heads, dh)
+    k, v = kv
+    o = _flash(q, k, v, causal=False, q_block=512, kv_block=512)
+    return o.reshape(B, T, -1) @ get("wo").astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Block application (one of the `period` positions)
+# ---------------------------------------------------------------------------
+def apply_block(bp, x, cfg: ModelConfig, kind, *, mode: str,
+                cache=None, pos=None, memory=None, causal=True, deq=None):
+    """Returns (x, aux, cache_out).  mode: train | prefill | decode.
+
+    cache_out: for prefill, the fresh cache entries for this block (KV of
+    the processed segment / final SSM state); for decode, the updated
+    cache; for train, None-tree.
+    """
+    is_attn, is_moe = kind
+    aux = jnp.float32(0.0)
+    cache_out = {}
+    h = rmsnorm(bp["pre_norm"], x, cfg.norm_eps)
+    if is_attn:
+        if mode == "decode":
+            a, new_kv = decode_attention(bp["attn"], h, cfg, cache, pos,
+                                         deq=deq)
+            cache_out.update(new_kv)
+        else:
+            a, (k, v) = attention(bp["attn"], h, cfg, causal=causal, deq=deq)
+            cache_out.update({"k": k, "v": v})
+        x = x + a
+    else:
+        if mode == "decode":
+            m, st = mamba_decode(bp["mamba"], h, cfg,
+                                 {"conv": cache["conv"], "ssd": cache["ssd"]},
+                                 deq=deq)
+        else:
+            m, st = mamba(bp["mamba"], h, cfg, deq=deq)
+        cache_out.update(st)
+        x = x + m
+    if "cross" in bp:
+        hc = rmsnorm(bp["cross_norm"], x, cfg.norm_eps)
+        if mode == "decode":
+            kv = (cache["ck"], cache["cv"])   # read-only at decode
+        else:
+            kv = cross_kv(bp["cross"], memory, cfg, deq=deq)
+            cache_out.update({"ck": kv[0], "cv": kv[1]})
+        x = x + cross_attention(bp["cross"], hc, kv, cfg, deq=deq)
+    if cfg.d_ff > 0:
+        h = rmsnorm(bp["mlp_norm"], x, cfg.norm_eps)
+        if is_moe:
+            y, a = moe(bp["moe"], h, cfg, deq=deq)
+            aux = aux + a
+        else:
+            y = mlp(bp["mlp"], h, cfg, deq=deq)
+        x = x + y
+    return x, aux, cache_out
+
+
+# ---------------------------------------------------------------------------
+# Stack application via scan over super-layers
+# ---------------------------------------------------------------------------
+def apply_stack(blocks, x, cfg: ModelConfig, *, mode: str, caches=None,
+                pos=None, memory=None, causal=True, deq=None,
+                kinds=None, remat=None):
+    """blocks: {"b<k>": stacked subtree}; caches mirrors blocks (decode) or
+    is None.  Returns (x, aux, caches_out)."""
+    period = len(blocks)
+    keys = [f"b{k}" for k in range(period)]
+    if kinds is None:
+        kinds = cfg.layer_kinds()[:period]
+    if remat is None:
+        remat = mode == "train"
+
+    def body(carry, xs):
+        xc, auxc = carry
+        # Residual anchor: batch over data, seq over model (Megatron
+        # sequence parallelism) when the rules context enables it.
+        xc = constrain(xc, "batch", "act_seq", None)
+        layer_p = xs[0]
+        layer_c = xs[1] if caches is not None else {k: None for k in keys}
+        outs = {}
+        for i, key in enumerate(keys):
+            xc, a, co = apply_block(
+                layer_p[key], xc, cfg, kinds[i], mode=mode,
+                cache=layer_c[key], pos=pos, memory=memory,
+                causal=causal, deq=deq)
+            auxc = auxc + a
+            outs[key] = co
+        return (xc, auxc), outs
+
+    if remat:
+        body = jax.checkpoint(body)
+
+    xs = (blocks,) if caches is None else (blocks, caches)
+    (x, aux), caches_out = jax.lax.scan(
+        body, (x, jnp.float32(0.0)), xs)
+    return x, aux, caches_out
+
+
+# ---------------------------------------------------------------------------
+# Embedding front: tokens (+ prefix embeds for VLM)
+# ---------------------------------------------------------------------------
+def _embed_input(params, batch, cfg: ModelConfig):
+    """-> (x [B, S_total, d], n_prefix)."""
+    x = embed(params["embed"], batch["tokens"], cfg)
+    n_prefix = 0
+    if cfg.frontend != "none" and cfg.family != "encdec":
+        prefix = batch["prefix"].astype(x.dtype)
+        proj = params["frontend"]["proj"].astype(x.dtype)
+        x = jnp.concatenate([prefix @ proj, x], axis=1)
+        n_prefix = prefix.shape[1]
+    return constrain(x, "batch", "act_seq", None), n_prefix
+
+
+def encode_memory(params, batch, cfg: ModelConfig, remat=False):
+    """Enc-dec encoder: frames [B,Se,F] -> memory [B,Se,d]."""
+    frames = batch["frames"]
+    proj = params["frontend"]["proj"]
+    x = frames.astype(cfg.compute_dtype) @ proj.astype(cfg.compute_dtype)
+    x, _, _ = apply_stack({"b0": params["enc_blocks"]["e0"]}, x, cfg,
+                          mode="train" if remat else "prefill",
+                          causal=False, kinds=[(True, False)], remat=remat)
+    return rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+def forward_logits(params, batch, cfg: ModelConfig, *, mode="train",
+                   deq=None):
+    """-> (logits [B, S_text, V], aux)."""
+    x, n_prefix = _embed_input(params, batch, cfg)
+    memory = (encode_memory(params, batch, cfg, remat=(mode == "train"))
+              if cfg.family == "encdec" else None)
+    x, aux, _ = apply_stack(params["blocks"], x, cfg, mode=mode,
+                            memory=memory, deq=deq)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if n_prefix:
+        x = x[:, n_prefix:, :]
+    lg = logits(params.get("logits", {}), x, cfg,
+                embed_params=params["embed"], deq=deq)
+    return lg, aux
+
+
+def lm_loss(params, batch, cfg: ModelConfig, aux_weight: float = 0.01):
+    lg, aux = forward_logits(params, batch, cfg, mode="train")
+    loss = softmax_xent(lg, batch["labels"])
+    total = loss + aux_weight * aux
+    return total, {"xent": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving: cache init / prefill / decode
+# ---------------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               enc_len: int = 0, dtype=jnp.bfloat16) -> Tree:
+    period = cfg.scan_period()
+    depth = cfg.n_layers // period
+    kinds = cfg.layer_kinds()[:period]
+    dh, hkv = cfg.head_dim, cfg.n_kv_heads
+
+    def one(kind):
+        is_attn, _ = kind
+        c = {}
+        if is_attn:
+            c["k"] = jnp.zeros((depth, batch, max_len, hkv, dh), dtype)
+            c["v"] = jnp.zeros((depth, batch, max_len, hkv, dh), dtype)
+        else:
+            st = mamba_init_state(cfg, batch, dtype)
+            c["conv"] = jnp.tile(st["conv"][None], (depth, 1, 1, 1))
+            c["ssd"] = jnp.tile(st["ssd"][None], (depth, 1, 1, 1, 1))
+        if cfg.family == "encdec":
+            c["ck"] = jnp.zeros((depth, batch, enc_len, hkv, dh), dtype)
+            c["cv"] = jnp.zeros((depth, batch, enc_len, hkv, dh), dtype)
+        return c
+
+    return {f"b{k}": one(kinds[k]) for k in range(period)}
+
+
+def prefill(params, batch, cfg: ModelConfig, max_len: int,
+            dtype=jnp.bfloat16, deq=None):
+    """Process the prompt; build a max_len cache.  Returns
+    (cache, last_logits [B, V], n_prefix)."""
+    x, n_prefix = _embed_input(params, batch, cfg)
+    memory = (encode_memory(params, batch, cfg)
+              if cfg.family == "encdec" else None)
+    S = x.shape[1]
+    x, aux, fresh = apply_stack(params["blocks"], x, cfg, mode="prefill",
+                                memory=memory, deq=deq)
+    xl = rmsnorm(params["final_norm"], x[:, -1:, :], cfg.norm_eps)
+    lg = logits(params.get("logits", {}), xl, cfg,
+                embed_params=params["embed"], deq=deq)[:, 0, :]
+
+    cache = init_cache(cfg, x.shape[0], max_len,
+                       enc_len=memory.shape[1] if memory is not None else 0,
+                       dtype=dtype)
+    merged = {}
+    for key, c in cache.items():
+        merged[key] = {}
+        for name, dst in c.items():
+            src = fresh[key][name]
+            if name in ("k", "v"):
+                merged[key][name] = jax.lax.dynamic_update_slice_in_dim(
+                    dst, src.astype(dst.dtype), 0, 2)
+            else:
+                merged[key][name] = src.astype(dst.dtype)
+    return merged, lg, S
+
+
+def decode_step(params, token, cache, pos, cfg: ModelConfig, deq=None):
+    """token [B] int32; pos scalar int32 (current cache length).
+    Returns (logits [B, V], new_cache).
+
+    The layer scan reads the KV cache; fresh per-layer (k, v) come back
+    stacked and are merged with ONE dynamic-update-slice per cache
+    tensor — not one per layer (§Perf iteration 2)."""
+    x = embed(params["embed"], token[:, None], cfg)
+    x, _, outs = apply_stack(params["blocks"], x, cfg, mode="decode",
+                             caches=cache, pos=pos, deq=deq)
+    new_cache = {}
+    for key, c in cache.items():
+        nc = dict(c)
+        o = outs[key]
+        if "k_new" in o:
+            # o["k_new"]: [depth, B, 1, Hkv, D] -> write at seq pos
+            for name, src in (("k", o["k_new"]), ("v", o["v_new"])):
+                dst = c[name]
+                upd = src.astype(dst.dtype)
+                start = (0, 0, pos, 0, 0)
+                nc[name] = jax.lax.dynamic_update_slice(dst, upd, start)
+        if "conv" in o:
+            nc["conv"] = o["conv"].astype(c["conv"].dtype)
+            nc["ssd"] = o["ssd"]
+        new_cache[key] = nc
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    lg = logits(params.get("logits", {}), x, cfg,
+                embed_params=params["embed"], deq=deq)[:, 0, :]
+    return lg, new_cache

@@ -1,0 +1,20 @@
+"""HOBFLOPS weight quantization for the LM stack.
+
+Storage layouts for custom-precision FP weights (the paper's "fast
+custom-precision FP ... valuable in cases where memory bandwidth is
+limited", adapted to TPU serving):
+
+* ``"native"``    — one code per int8/int16 element.  Cheap dequant
+                    (~8 VPU ops/elem) but rounds the footprint up to the
+                    container width.
+* ``"bitplane"``  — the paper's bitslice layout: exactly ``nbits`` bits
+                    per weight in HBM (e.g. 9 bits for HOBFLOPS9), at a
+                    higher dequant cost.  This is where sub-byte formats
+                    actually pay off on the memory roofline term.
+"""
+from .storage import (QuantizedTensor, dequantize, quantize,
+                      storage_bytes)
+from .apply import make_deq, quantize_params, quantized_bytes
+
+__all__ = ["QuantizedTensor", "quantize", "dequantize", "storage_bytes",
+           "quantize_params", "make_deq", "quantized_bytes"]

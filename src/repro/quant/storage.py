@@ -1,0 +1,88 @@
+"""Quantized weight tensors: HOBFLOPS codes in native or bitplane layout."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import softfloat as sf
+from repro.core.fpformat import RNE, StorageFormat
+
+LANE = 32
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class QuantizedTensor:
+    """A weight tensor stored as HOBFLOPS StorageFormat codes.
+
+    layout "native":   data is int8/int16 with `shape`.
+    layout "bitplane": data is int32 [nbits, prod(shape)/32] bit planes.
+    """
+    data: Any
+    scale: Any  # f32 per-tensor scale (power-of-two friendly but free-form)
+    sfmt: StorageFormat = dataclasses.field(metadata=dict(static=True))
+    layout: str = dataclasses.field(metadata=dict(static=True))
+    shape: tuple = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def dtype(self):
+        return jnp.float32
+
+    def nbytes_hbm(self) -> int:
+        return storage_bytes(self.shape, self.sfmt, self.layout)
+
+
+def storage_bytes(shape, sfmt: StorageFormat, layout: str) -> int:
+    import math
+    n = math.prod(shape)
+    if layout == "native":
+        return n * (1 if sfmt.container() == "int8" else 2)
+    return -(-n * sfmt.nbits // 8)  # true bit packing
+
+
+def quantize(w, sfmt: StorageFormat, layout: str = "native",
+             rounding: str = RNE, scale=None) -> QuantizedTensor:
+    """Quantize float weights.  `scale` defaults to amax-based so the
+    largest weight maps near the top of the format's range."""
+    w = jnp.asarray(w, jnp.float32)
+    if scale is None:
+        amax = jnp.maximum(jnp.max(jnp.abs(w)), 1e-30)
+        # place amax at ~half the max representable magnitude
+        target = 2.0 ** (sfmt.emax - sfmt.bias - 1)
+        scale = amax / target
+    codes = sf.encode_storage(w / scale, sfmt, rounding)
+    if layout == "native":
+        ct = jnp.int8 if sfmt.container() == "int8" else jnp.int16
+        data = codes.astype(ct)
+    elif layout == "bitplane":
+        flat = codes.reshape(-1)
+        pad = (-flat.shape[0]) % LANE
+        flat = jnp.pad(flat, (0, pad))
+        from repro.core.bitslice import pack_planes
+        data = pack_planes(flat, sfmt.nbits)       # [nbits, n/32] int32
+    else:
+        raise ValueError(layout)
+    return QuantizedTensor(data=data, scale=jnp.float32(scale), sfmt=sfmt,
+                           layout=layout, shape=tuple(w.shape))
+
+
+def dequantize(qt: QuantizedTensor):
+    """-> float32 tensor of qt.shape (the pure-jnp reference path)."""
+    import math
+    n = math.prod(qt.shape)
+    if qt.layout == "native":
+        codes = qt.data.astype(jnp.int32)
+    elif qt.layout == "bitplane2d":
+        # [nbits, K, N//32] planes (shardable along K and N//32)
+        from repro.core.bitslice import unpack_planes
+        nbits, K, Nw = qt.data.shape
+        codes = unpack_planes(qt.data.reshape(nbits, K * Nw))
+        codes = codes.reshape(K, Nw * LANE)
+    else:
+        from repro.core.bitslice import unpack_planes
+        codes = unpack_planes(qt.data)[:n].reshape(qt.shape)
+    vals = sf.decode_storage(codes, qt.sfmt)
+    return vals.reshape(qt.shape) * qt.scale

@@ -1,0 +1,5 @@
+from .engine import Request, ServeEngine
+from .steps import make_decode_step, make_prefill_step
+
+__all__ = ["make_prefill_step", "make_decode_step", "ServeEngine",
+           "Request"]

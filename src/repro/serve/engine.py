@@ -1,0 +1,122 @@
+"""Batched serving engine (wave-scheduled continuous batching).
+
+Production decode runs a fixed-size batch of *slots* in lockstep so one
+compiled decode step serves every request mix.  This engine schedules
+in waves: up to ``n_slots`` queued requests are admitted together,
+prompts are padded to the wave's common prefill length, the wave
+decodes in lockstep, requests that finish early are masked out (their
+slots keep decoding garbage that is simply discarded — the standard
+price of lockstep batching), and the next wave starts when the wave
+drains.  All positions stay synchronized, which keeps the decode step's
+single-position cache semantics exact.
+
+Per-slot ragged admission (true token-level continuous batching) needs
+vector positions in the decode path — per-slot validity masks and a
+scatter merge; noted in DESIGN.md as the next serving feature.
+
+Works with quantized (HOBFLOPS bitplane) weights via the same ``deq``
+hook as everything else.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import decode_step, prefill
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    tokens: np.ndarray            # prompt token ids [S]
+    max_new: int = 16
+    eos_id: int | None = None
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, *, n_slots: int = 4,
+                 max_len: int = 256, deq=None, cache_dtype=jnp.float32):
+        assert cfg.family != "encdec", \
+            "engine currently serves decoder-only families"
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.deq = deq
+        self.queue: deque[Request] = deque()
+        self.total_decode_steps = 0
+        self.total_tokens = 0
+        self._decode = jax.jit(
+            lambda p, t, pos, c: decode_step(p, t, c, pos, cfg, deq=deq))
+        self._prefill = jax.jit(
+            lambda p, batch: prefill(p, batch, cfg, max_len,
+                                     dtype=cache_dtype, deq=deq))
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    # ---- one wave -----------------------------------------------------------
+    def _run_wave(self) -> list[Request]:
+        wave = [self.queue.popleft()
+                for _ in range(min(self.n_slots, len(self.queue)))]
+        B = self.n_slots
+        plen = max(len(r.tokens) for r in wave)
+        toks = np.zeros((B, plen), np.int32)
+        for i, r in enumerate(wave):
+            # left-pad by repeating the first token: every position is a
+            # real token so the causal mask stays trivially valid, and
+            # generation conditions on the full prompt suffix.
+            pad = plen - len(r.tokens)
+            toks[i, :pad] = r.tokens[0]
+            toks[i, pad:] = r.tokens
+        batch = {"tokens": jnp.asarray(toks)}
+        if self.cfg.frontend != "none":
+            batch["prefix"] = jnp.zeros(
+                (B, self.cfg.num_prefix, self.cfg.frontend_dim),
+                jnp.float32)
+
+        cache, logits, length = self._prefill(self.params, batch)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        live = []
+        for i, r in enumerate(wave):
+            r.out.append(int(tok[i]))
+            live.append(not (len(r.out) >= r.max_new
+                             or (r.eos_id is not None
+                                 and r.out[-1] == r.eos_id)))
+        pos = int(length)
+
+        budget = max(r.max_new for r in wave) - 1
+        for _ in range(budget):
+            if pos >= self.max_len - 1 or not any(live):
+                break
+            logits, cache = self._decode(
+                self.params, tok, jnp.asarray(pos, jnp.int32), cache)
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+            nxt = np.asarray(tok)
+            self.total_decode_steps += 1
+            for i, r in enumerate(wave):
+                if not live[i]:
+                    continue
+                r.out.append(int(nxt[i]))
+                self.total_tokens += 1
+                if (len(r.out) >= r.max_new
+                        or (r.eos_id is not None
+                            and r.out[-1] == r.eos_id)):
+                    live[i] = False
+            pos += 1
+        for r in wave:
+            r.done = True
+        return wave
+
+    def run(self) -> list[Request]:
+        finished: list[Request] = []
+        while self.queue:
+            finished.extend(self._run_wave())
+        return finished

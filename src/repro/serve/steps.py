@@ -1,0 +1,38 @@
+"""Serving steps: prefill and single-token decode, with optional
+HOBFLOPS-quantized weights (the paper's custom-precision FP as the
+memory-bandwidth lever of decode).
+
+Decode is the memory-roofline-bound phase: every step reads all weights
+plus the KV cache once.  With ``quant`` enabled, targeted weight
+families are held in HOBFLOPS bitplane codes (exactly nbits bits per
+weight in HBM) and dequantized on the fly.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import decode_step, prefill
+from repro.models.config import ModelConfig
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: int, deq=None):
+    def prefill_step(params, batch):
+        cache, last_logits, length = prefill(params, batch, cfg, max_len,
+                                             deq=deq)
+        return cache, last_logits, length
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, deq=None, sample: str = "greedy"):
+    def serve_step(params, token, pos, cache):
+        logits, new_cache = decode_step(params, token, cache, pos, cfg,
+                                        deq=deq)
+        if sample == "greedy":
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            raise ValueError(sample)
+        return nxt, logits, new_cache
+    return serve_step

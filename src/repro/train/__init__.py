@@ -1,0 +1,4 @@
+from .step import TrainConfig, init_state, make_train_step, train_state_specs
+
+__all__ = ["TrainConfig", "make_train_step", "init_state",
+           "train_state_specs"]

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Tests run on the real device set (1 CPU device) — the 512-device
+# XLA_FLAGS override belongs to launch/dryrun.py ONLY.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,117 @@
+"""Gate-level circuits vs the softfloat oracle — exhaustive for small
+formats — plus tech-mapping equivalence (the Yosys-SAT analogue) and
+gate-count regression guards."""
+import numpy as np
+import pytest
+
+from repro.core import softfloat as sf
+from repro.core.bitslice import pack_planes_np, unpack_planes_np
+from repro.core.circuit import Graph
+from repro.core.codegen import eval_netlist
+from repro.core.fpcore import build_add, build_mac, build_mul
+from repro.core.fpformat import RNE, RTZ, FPFormat
+from repro.core.opt import CELL_LIBS, tech_map
+
+from test_softfloat import canonical_codes
+
+
+def run_netlist(g, inputs_codes: dict, widths: dict):
+    planes = {name: pack_planes_np(codes, widths[name])
+              for name, codes in inputs_codes.items()}
+    out = eval_netlist(g, planes)["out"]
+    n = len(next(iter(inputs_codes.values())))
+    return unpack_planes_np(out, n)
+
+
+@pytest.mark.parametrize("rounding", [RNE, RTZ])
+@pytest.mark.parametrize("extended", [False, True])
+def test_mul_exhaustive(rounding, extended):
+    fmt = FPFormat(3, 2)
+    fmt_out = fmt.mult_out(extended)
+    xs = canonical_codes(fmt)
+    X, Y = np.repeat(xs, len(xs)), np.tile(xs, len(xs))
+    g = build_mul(fmt, fmt_out, rounding)
+    got = run_netlist(g, {"x": X, "y": Y},
+                      {"x": fmt.nbits, "y": fmt.nbits})
+    want = sf.fp_mul(X, Y, fmt, fmt_out, rounding)
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("rounding", [RNE, RTZ])
+@pytest.mark.parametrize("fmt", [FPFormat(3, 3), FPFormat(4, 2)])
+def test_add_exhaustive(rounding, fmt):
+    xs = canonical_codes(fmt)
+    X, Y = np.repeat(xs, len(xs)), np.tile(xs, len(xs))
+    g = build_add(fmt, rounding)
+    got = run_netlist(g, {"x": X, "y": Y},
+                      {"x": fmt.nbits, "y": fmt.nbits})
+    want = sf.fp_add(X, Y, fmt, rounding)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_mac_random():
+    fmt = FPFormat(5, 2)   # hobflops8
+    fmt_out = fmt.mult_out()
+    rng = np.random.default_rng(0)
+    n = 4096
+    X = canonical_codes(fmt)[rng.integers(0, 2 ** fmt.nbits - 300, n) % 261]
+    Y = canonical_codes(fmt)[rng.integers(0, 261, n)]
+    A = canonical_codes(fmt_out)[rng.integers(
+        0, len(canonical_codes(fmt_out)), n)]
+    g = build_mac(fmt)
+    got = run_netlist(g, {"x": X, "y": Y, "acc": A},
+                      {"x": fmt.nbits, "y": fmt.nbits,
+                       "acc": fmt_out.nbits})
+    want = sf.fp_mac(X, Y, A, fmt, fmt_out)
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("lib", ["tpu_vpu", "avx2", "neon", "avx512"])
+def test_tech_map_preserves_semantics(lib):
+    fmt = FPFormat(3, 2)
+    fmt_out = fmt.mult_out()
+    xs = canonical_codes(fmt)
+    X, Y = np.repeat(xs, len(xs)), np.tile(xs, len(xs))
+    g = build_mul(fmt, fmt_out, RNE)
+    mapped = tech_map(g, CELL_LIBS[lib]())
+    got = run_netlist(mapped, {"x": X, "y": Y},
+                      {"x": fmt.nbits, "y": fmt.nbits})
+    want = run_netlist(g, {"x": X, "y": Y},
+                       {"x": fmt.nbits, "y": fmt.nbits})
+    np.testing.assert_array_equal(got, want)
+
+
+def test_lib_ordering_matches_paper():
+    """Paper: AVX512 (ternary LUT) < Neon (SEL) < AVX2 (2-input) in
+    bitwise op count for the same MAC."""
+    fmt = FPFormat(5, 2)
+    g = build_mac(fmt)
+    gates = {lib: tech_map(g, CELL_LIBS[lib]()).live_gate_count()
+             for lib in ("avx2", "neon", "avx512")}
+    assert gates["avx512"] < gates["neon"] < gates["avx2"]
+
+
+def test_rtz_smaller_than_rne():
+    """Paper §4: round-towards-zero removes the rounding adder."""
+    fmt = FPFormat(5, 3)
+    rne = build_mac(fmt, rounding=RNE).live_gate_count()
+    rtz = build_mac(fmt, rounding=RTZ).live_gate_count()
+    assert rtz < rne
+
+
+def test_gate_count_monotone_in_precision():
+    g8 = build_mac(FPFormat(5, 2)).live_gate_count()
+    g12 = build_mac(FPFormat(5, 6)).live_gate_count()
+    g16 = build_mac(FPFormat(5, 10)).live_gate_count()
+    assert g8 < g12 < g16
+
+
+def test_hash_consing_shares_structure():
+    g = Graph()
+    a = g.input_bus("a", 1)[0]
+    b = g.input_bus("b", 1)[0]
+    x1 = g.AND(a, b)
+    x2 = g.AND(b, a)      # commuted -> same node
+    assert x1 == x2
+    assert g.XOR(a, a) == 0        # FALSE
+    assert g.OR(a, g.NOT(a)) == 1  # TRUE

@@ -1,0 +1,70 @@
+"""Fault-tolerance: heartbeats, stragglers, elastic re-mesh planning."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.ft import (Heartbeat, StragglerMonitor, Supervisor,
+                      plan_remesh, stale_hosts)
+
+
+def test_heartbeat_staleness(tmp_path):
+    hb1 = Heartbeat(str(tmp_path), "hostA")
+    hb2 = Heartbeat(str(tmp_path), "hostB")
+    hb1.beat(5, 0.5, now=1000.0)
+    hb2.beat(5, 0.5, now=1070.0)
+    assert stale_hosts(tmp_path, timeout_s=60, now=1071.0) == ["hostA"]
+    assert stale_hosts(tmp_path, timeout_s=600, now=1071.0) == []
+
+
+def test_straggler_detection():
+    mon = StragglerMonitor(factor=1.5)
+    for _ in range(5):
+        for h in ("a", "b", "c", "d"):
+            mon.observe(h, 1.0)
+        mon.observe("slow", 3.0)
+    assert mon.stragglers() == ["slow"]
+    assert mon.fleet_summary()["hosts"] == 5
+
+
+@given(st.integers(0, 4096), st.sampled_from([8, 16, 32]))
+@settings(max_examples=200, deadline=None)
+def test_plan_remesh_properties(alive, mp):
+    plan = plan_remesh(alive, mp, chips_per_pod=256)
+    if alive < mp:
+        assert plan is None
+    if plan is not None:
+        pods, data, model = plan
+        assert model == mp
+        assert pods >= 1 and data >= 1
+        assert pods * data * model <= max(alive, 1)
+        assert data & (data - 1) == 0   # power of two
+
+
+def test_plan_remesh_full_fleet():
+    assert plan_remesh(512, 16) == (2, 16, 16)
+    assert plan_remesh(256, 16) == (1, 16, 16)
+    # lose one host of 4 chips from a 512 fleet -> shrink data axis
+    assert plan_remesh(508, 16) == (1, 16, 16)
+
+
+def test_supervisor_poll(tmp_path):
+    hosts = [f"h{i}" for i in range(4)]
+    for i, h in enumerate(hosts):
+        if h == "h3":
+            continue                     # h3 never heartbeats
+        Heartbeat(str(tmp_path), h).beat(1, 1.0, now=1000.0)
+    sup = Supervisor(str(tmp_path), hosts, chips_per_host=64,
+                     model_parallel=16, timeout_s=60)
+    act = sup.poll(now=1001.0)
+    assert act["action"] == "remesh"
+    assert act["dead"] == ["h3"]
+    assert act["new_mesh"] == (1, 8, 16)   # 192 chips -> data 8
+
+
+def test_supervisor_all_healthy(tmp_path):
+    hosts = ["h0", "h1"]
+    for h in hosts:
+        Heartbeat(str(tmp_path), h).beat(1, 1.0, now=1000.0)
+    sup = Supervisor(str(tmp_path), hosts, timeout_s=60)
+    assert sup.poll(now=1001.0)["action"] == "none"

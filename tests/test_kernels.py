@@ -1,0 +1,143 @@
+"""Pallas kernels vs pure oracles: shape/dtype/format sweeps.
+
+Each kernel runs in interpret mode (the kernel body executes as real
+jax ops on CPU) and must agree with the sequential code-level oracle —
+for the bitslice MAC, bit-exactly."""
+import numpy as np
+import pytest
+
+from repro.core import softfloat as sf
+from repro.core.fpformat import RNE, RTZ, FPFormat, StorageFormat
+from repro.kernels.bitslice_mac.ops import hobflops_matmul
+from repro.kernels.bitslice_mac.ref import hobflops_matmul_f64
+from repro.kernels.conv2d_bitslice.ops import hobflops_conv2d, im2col
+from repro.kernels.conv2d_bitslice.ref import (conv2d_f32,
+                                               hobflops_conv2d_ref)
+from repro.kernels.dequant_matmul.ops import dequant_matmul, pack_weights
+from repro.kernels.dequant_matmul.ref import dequant_matmul_ref
+from repro.quant.storage import dequantize, quantize
+
+
+def _rand(rng, shape, scale=1.0):
+    return (rng.standard_normal(shape) * scale).astype(np.float32)
+
+
+@pytest.mark.parametrize("fmt,extended,rounding", [
+    (FPFormat(5, 2), False, RNE),      # hobflops8
+    (FPFormat(5, 3), False, RNE),      # hobflops9
+    (FPFormat(5, 3), True, RNE),       # hobflops9e
+    (FPFormat(4, 3), False, RNE),      # ieee8
+    (FPFormat(5, 3), False, RTZ),
+])
+def test_bitslice_mac_formats(fmt, extended, rounding):
+    rng = np.random.default_rng(hash((fmt.w_e, fmt.w_f, extended)) % 99)
+    P, C, M = 4, 8, 32
+    i, w = _rand(rng, (P, C)), _rand(rng, (C, M))
+    want = hobflops_matmul_f64(i, w, fmt, extended, rounding)
+    got = np.asarray(hobflops_matmul(
+        i, w, fmt=fmt, extended=extended, rounding=rounding,
+        backend="pallas", interpret=True, p_block=4, m_block=1,
+        c_block=8))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("P,C,M", [(1, 1, 32), (3, 5, 32), (8, 16, 64),
+                                   (16, 32, 96)])
+def test_bitslice_mac_shapes(P, C, M):
+    fmt = FPFormat(5, 3)
+    rng = np.random.default_rng(P * 100 + C)
+    i, w = _rand(rng, (P, C)), _rand(rng, (C, M))
+    want = hobflops_matmul_f64(i, w, fmt)
+    got_j = np.asarray(hobflops_matmul(i, w, fmt=fmt, backend="jnp"))
+    got_p = np.asarray(hobflops_matmul(
+        i, w, fmt=fmt, backend="pallas", interpret=True,
+        p_block=min(4, P), m_block=1, c_block=min(8, C)))
+    np.testing.assert_array_equal(got_j, want)
+    np.testing.assert_array_equal(got_p, want)
+
+
+def test_bitslice_mac_zero_identity():
+    """Zero-padding is the MAC identity (paper's tiling assumption)."""
+    fmt = FPFormat(5, 3)
+    rng = np.random.default_rng(0)
+    i, w = _rand(rng, (4, 8)), _rand(rng, (8, 32))
+    base = np.asarray(hobflops_matmul(i, w, fmt=fmt, backend="jnp"))
+    ip = np.concatenate([i, np.zeros((4, 8), np.float32)], axis=1)
+    wp = np.concatenate([w, np.zeros((8, 32), np.float32)], axis=0)
+    padded = np.asarray(hobflops_matmul(ip, wp, fmt=fmt, backend="jnp"))
+    np.testing.assert_array_equal(base, padded)
+
+
+def test_bitslice_mac_accuracy_tracks_precision():
+    rng = np.random.default_rng(5)
+    i, w = _rand(rng, (8, 16)), _rand(rng, (16, 32))
+    exact = i.astype(np.float64) @ w.astype(np.float64)
+    errs = []
+    for wf in (2, 4, 7, 10):
+        fmt = FPFormat(5, wf)
+        got = hobflops_matmul_f64(i, w, fmt)
+        errs.append(np.abs(got - exact).max())
+    assert errs[0] > errs[1] > errs[2] > errs[3]
+
+
+@pytest.mark.parametrize("sfmt", [StorageFormat(5, 2), StorageFormat(5, 3),
+                                  StorageFormat(4, 3), StorageFormat(8, 7)])
+@pytest.mark.parametrize("MKN", [(8, 32, 64), (16, 64, 128)])
+def test_dequant_matmul(sfmt, MKN):
+    M, K, N = MKN
+    rng = np.random.default_rng(M * K)
+    x, w = _rand(rng, (M, K)), _rand(rng, (K, N))
+    qt = pack_weights(w, sfmt)
+    want = np.asarray(dequant_matmul_ref(x, qt.data, qt.scale, sfmt, N))
+    got = np.asarray(dequant_matmul(x, qt, backend="pallas",
+                                    interpret=True, bm=8, bn=32, bk=16))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_dequant_matmul_footprint():
+    w = np.random.default_rng(0).standard_normal((64, 128)).astype(
+        np.float32)
+    sfmt = StorageFormat(5, 3)   # 9 bits/weight
+    qt = pack_weights(w, sfmt)
+    assert qt.data.size * 4 == 64 * 128 * 9 // 8  # true bit packing
+
+
+@pytest.mark.parametrize("stride,padding", [(1, "SAME"), (2, "SAME"),
+                                            (1, "VALID")])
+def test_im2col_matches_lax_conv(stride, padding):
+    rng = np.random.default_rng(2)
+    img = _rand(rng, (2, 8, 8, 4))
+    ker = _rand(rng, (3, 3, 4, 8), 0.4)
+    pat = np.asarray(im2col(img, 3, 3, stride, padding))
+    got = pat.reshape(-1, 36) @ ker.reshape(36, 8)
+    want = conv2d_f32(img, ker, stride, padding).reshape(-1, 8)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("relu", [False, True])
+def test_hobflops_conv2d(relu):
+    fmt = FPFormat(5, 3)
+    rng = np.random.default_rng(4)
+    img = _rand(rng, (1, 5, 5, 4))
+    ker = _rand(rng, (3, 3, 4, 32), 0.4)
+    got = np.asarray(hobflops_conv2d(img, ker, fmt=fmt, relu=relu,
+                                     backend="jnp"))
+    want = hobflops_conv2d_ref(img, ker, fmt, relu=relu)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_hobflops_relu_is_bitwise():
+    """ReLU in the bitslice domain == ReLU on decoded values."""
+    import jax.numpy as jnp
+    from repro.core.bitslice import pack_planes, unpack_planes
+    from repro.kernels.conv2d_bitslice.ops import hobflops_relu_planes
+    fmt = FPFormat(5, 4)
+    rng = np.random.default_rng(9)
+    vals = rng.standard_normal(64).astype(np.float32)
+    codes = sf.encode_jnp(jnp.asarray(vals), fmt)
+    planes = pack_planes(codes, fmt.nbits)
+    relu_planes = hobflops_relu_planes(planes, fmt)
+    back = np.asarray(sf.decode_jnp(unpack_planes(relu_planes), fmt))
+    want = np.asarray(sf.decode_jnp(codes, fmt))
+    want = np.where(want <= 0, 0.0, want)
+    np.testing.assert_array_equal(back, want)

@@ -1,0 +1,102 @@
+"""Sharding rules: divisibility fallback, candidate lists, cache specs,
+and the dry-run input-spec plumbing (no 512-device requirement)."""
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import (ARCH_NAMES, batch_specs, cache_specs,
+                           get_config, smoke_config)
+from repro.distributed.sharding import batch_pspecs, cache_pspecs
+from repro.models import model_schema
+from repro.models.config import SHAPES
+from repro.models.schema import Rules, logical_spec, make_rules, pspecs
+
+
+def fake_rules(pod=2, data=16, model=16, seq_parallel=True):
+    table_mesh = {"pod": pod, "data": data, "model": model}
+    axes = [a for a, s in table_mesh.items() if s]
+
+    class M:
+        axis_names = tuple(axes)
+        class devices:
+            shape = tuple(table_mesh[a] for a in axes)
+    return make_rules(M, seq_parallel=seq_parallel)
+
+
+def test_divisibility_fallback():
+    rules = fake_rules()
+    # 14 heads cannot shard over model=16 -> replicate
+    assert logical_spec(rules, "batch", None, "qheads", None,
+                        dims=(128, 4096, 14, 64)) == \
+        P(("pod", "data"), None, None, None)
+    # 128 heads can
+    assert logical_spec(rules, "batch", None, "qheads", None,
+                        dims=(128, 4096, 128, 64))[2] == "model"
+
+
+def test_kvseq_candidates():
+    rules = fake_rules()
+    # batch=1 (long-context): kvseq takes the widest split
+    spec = logical_spec(rules, "layers", "batch", "kvseq", "kvheads", None,
+                        dims=(32, 1, 524288, 8, 128))
+    assert spec[2] == ("pod", "data", "model")
+    # batch shardable: data axes consumed, kvseq falls back to model
+    spec = logical_spec(rules, "layers", "batch", "kvseq", "kvheads", None,
+                        dims=(32, 128, 32768, 8, 128))
+    assert spec[1] == ("pod", "data") and spec[2] == "model"
+
+
+def test_param_pspecs_use_both_axes():
+    cfg = get_config("llama3-405b")
+    rules = fake_rules()
+    specs = pspecs(model_schema(cfg), rules)
+    wq = specs["blocks"]["b0"]["attn"]["wq"]
+    # [layers, d_model, q_heads*dh]: FSDP over data axes + TP over model
+    assert wq == P(None, ("pod", "data"), "model")
+
+
+def test_moe_expert_sharding_by_count():
+    rules = fake_rules()
+    olmoe = pspecs(model_schema(get_config("olmoe-1b-7b")), rules)
+    grok = pspecs(model_schema(get_config("grok-1-314b")), rules)
+    # olmoe: 64 experts % 16 == 0 -> EP over model
+    assert olmoe["blocks"]["b0"]["moe"]["w_gate"][1] == "model"
+    # grok: 8 experts -> replicate experts, TP falls to d_ff (emlp)
+    g = grok["blocks"]["b0"]["moe"]["w_gate"]
+    assert g[1] is None and g[3] == "model"
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_cache_specs_build(arch):
+    cfg = get_config(arch)
+    rules = fake_rules()
+    for shape_name in ("decode_32k", "long_500k"):
+        from repro.models.config import shape_applicable
+        shape = SHAPES[shape_name]
+        ok, _ = shape_applicable(cfg, shape)
+        if not ok:
+            continue
+        cache = cache_specs(cfg, shape)
+        specs = cache_pspecs(cache, rules)
+        assert jax.tree.structure(specs, is_leaf=lambda x: isinstance(
+            x, P)) == jax.tree.structure(
+                cache, is_leaf=lambda x: hasattr(x, "shape"))
+
+
+def test_batch_pspecs():
+    cfg = get_config("internvl2-26b")
+    rules = fake_rules()
+    specs = batch_pspecs(batch_specs(cfg, SHAPES["train_4k"], train=True),
+                         rules)
+    assert specs["tokens"] == P(("pod", "data"), None)
+    assert specs["prefix"] == P(("pod", "data"), None, None)
+
+
+def test_smoke_configs_preserve_topology():
+    for arch in ARCH_NAMES:
+        full, small = get_config(arch), smoke_config(arch)
+        assert full.family == small.family
+        assert (full.moe_experts > 0) == (small.moe_experts > 0)
+        assert (full.ssm_state > 0) == (small.ssm_state > 0)
+        assert full.scan_period() >= small.scan_period() or True
+        assert small.n_layers % small.scan_period() == 0

@@ -1,0 +1,127 @@
+"""The word-parallel softfloat oracle vs true float64 arithmetic.
+
+For small formats every operand pair is exhaustively enumerated; the
+f64 product/sum of two small-format values is exact in f64, so
+``encode(decode(x) op decode(y))`` is the ground truth the FloPoCo-
+semantics implementation must match (modulo flush-to-zero/saturate,
+which encode() applies identically).
+"""
+import numpy as np
+import pytest
+
+from repro.core import softfloat as sf
+from repro.core.fpformat import (EXC_INF, EXC_NAN, EXC_NORMAL, EXC_ZERO,
+                                 RNE, RTZ, FPFormat)
+
+
+def canonical_codes(fmt, specials=True):
+    codes = []
+    if specials:
+        for exc, signs in ((EXC_ZERO, (0, 1)), (EXC_INF, (0, 1)),
+                           (EXC_NAN, (0,))):
+            for s in signs:
+                codes.append(int(sf.pack(exc, s, 0, 0, fmt)))
+    n = 2 * (1 << fmt.w_e) * (1 << fmt.w_f)
+    sign = np.repeat([0, 1], n // 2)
+    exp = np.tile(np.repeat(np.arange(1 << fmt.w_e), 1 << fmt.w_f), 2)
+    frac = np.tile(np.arange(1 << fmt.w_f), 2 * (1 << fmt.w_e))
+    codes.extend(sf.pack(np.full(n, EXC_NORMAL), sign, exp, frac, fmt))
+    return np.array(codes, dtype=np.int64)
+
+
+@pytest.mark.parametrize("fmt", [FPFormat(3, 2), FPFormat(4, 2),
+                                 FPFormat(2, 3)])
+def test_encode_decode_roundtrip(fmt):
+    codes = canonical_codes(fmt, specials=False)
+    vals = sf.decode(codes, fmt)
+    again = sf.encode(vals, fmt)
+    np.testing.assert_array_equal(codes, again)
+
+
+@pytest.mark.parametrize("rounding", [RNE, RTZ])
+def test_mul_matches_f64(rounding):
+    fmt = FPFormat(3, 2)
+    fmt_out = fmt.mult_out()
+    xs = canonical_codes(fmt, specials=False)
+    X = np.repeat(xs, len(xs))
+    Y = np.tile(xs, len(xs))
+    got = sf.fp_mul(X, Y, fmt, fmt_out, rounding)
+    want = sf.encode(sf.decode(X, fmt) * sf.decode(Y, fmt), fmt_out,
+                     rounding)
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("rounding", [RNE, RTZ])
+def test_add_matches_f64(rounding):
+    fmt = FPFormat(3, 3)
+    xs = canonical_codes(fmt, specials=False)
+    X = np.repeat(xs, len(xs))
+    Y = np.tile(xs, len(xs))
+    got = sf.fp_add(X, Y, fmt, rounding)
+    s = sf.decode(X, fmt) + sf.decode(Y, fmt)   # exact in f64
+    want = sf.encode(s, fmt, rounding)
+    # exact-cancellation signs: FloPoCo returns +0, encode(0.0) gives +0
+    np.testing.assert_array_equal(got, want)
+
+
+def test_special_values_mul():
+    fmt = FPFormat(4, 3)
+    fo = fmt.mult_out()
+    inf = sf.pack(EXC_INF, 0, 0, 0, fmt)
+    zero = sf.pack(EXC_ZERO, 0, 0, 0, fmt)
+    nan = sf.pack(EXC_NAN, 0, 0, 0, fmt)
+    one = sf.encode(1.0, fmt)
+    # inf * 0 = nan ; inf * 1 = inf ; nan * x = nan ; 0 * 1 = 0
+    assert sf.unpack(sf.fp_mul(inf, zero, fmt, fo), fo)[0] == EXC_NAN
+    assert sf.unpack(sf.fp_mul(inf, one, fmt, fo), fo)[0] == EXC_INF
+    assert sf.unpack(sf.fp_mul(nan, one, fmt, fo), fo)[0] == EXC_NAN
+    assert sf.unpack(sf.fp_mul(zero, one, fmt, fo), fo)[0] == EXC_ZERO
+
+
+def test_special_values_add():
+    fmt = FPFormat(4, 3)
+    inf = sf.pack(EXC_INF, 0, 0, 0, fmt)
+    ninf = sf.pack(EXC_INF, 1, 0, 0, fmt)
+    one = sf.encode(1.0, fmt)
+    # inf + (-inf) = nan ; inf + 1 = inf
+    assert sf.unpack(sf.fp_add(inf, ninf, fmt), fmt)[0] == EXC_NAN
+    assert sf.unpack(sf.fp_add(inf, one, fmt), fmt)[0] == EXC_INF
+
+
+def test_encode_jnp_matches_numpy():
+    import jax.numpy as jnp
+    fmt = FPFormat(5, 3)
+    rng = np.random.default_rng(0)
+    x = np.concatenate([
+        rng.standard_normal(512) * 10.0 ** rng.integers(-3, 3, 512),
+        [0.0, -0.0, np.inf, -np.inf, np.nan, 65504.0, 1e-30]])
+    got = np.asarray(sf.encode_jnp(jnp.asarray(x, jnp.float32), fmt))
+    want = sf.encode(np.asarray(x, np.float32).astype(np.float64), fmt)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_decode_jnp_matches_numpy():
+    import jax.numpy as jnp
+    fmt = FPFormat(5, 3)
+    codes = canonical_codes(fmt)
+    got = np.asarray(sf.decode_jnp(jnp.asarray(codes, jnp.int32), fmt))
+    want = sf.decode(codes, fmt).astype(np.float32)
+    np.testing.assert_array_equal(np.isnan(got), np.isnan(want))
+    m = ~np.isnan(want)
+    np.testing.assert_array_equal(got[m], want[m])
+
+
+def test_storage_format_roundtrip():
+    import jax.numpy as jnp
+    from repro.core.fpformat import StorageFormat
+    sfmt = StorageFormat(5, 3)
+    rng = np.random.default_rng(1)
+    w = rng.standard_normal(256).astype(np.float32)
+    codes = sf.encode_storage(jnp.asarray(w), sfmt)
+    vals = np.asarray(sf.decode_storage(codes, sfmt))
+    # max relative error of e5m3 RNE is 2^-4 = 6.25% (half ulp of 3-bit
+    # mantissa) for values in normal range
+    rel = np.abs(vals - w) / np.abs(w)
+    assert rel.max() < 2 ** -4 + 1e-6
+    # code 0 is exactly zero
+    assert np.asarray(sf.decode_storage(jnp.zeros(1, jnp.int32), sfmt)) == 0

@@ -1,0 +1,168 @@
+"""Training substrate: optimizer math, microbatch equivalence, loss
+actually decreases, quantized-serving consistency."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.data.pipeline import SyntheticLM, make_batch
+from repro.models import lm_loss, model_schema
+from repro.models.config import ShapeConfig
+from repro.models.schema import init_params
+from repro.optim import OptConfig, adamw_init, adamw_update, lr_at
+from repro.train.step import TrainConfig, init_state, make_train_step
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_lr_schedule():
+    opt = OptConfig(lr=1e-3, warmup_steps=10, total_steps=100,
+                    min_lr_ratio=0.1)
+    assert float(lr_at(opt, 0)) < float(lr_at(opt, 9))
+    np.testing.assert_allclose(float(lr_at(opt, 10)), 1e-3, rtol=1e-2)
+    assert float(lr_at(opt, 99)) < 2e-4  # decayed near min
+    assert float(lr_at(opt, 200)) >= 1e-4 * 0.99  # floor
+
+
+def test_adamw_matches_reference():
+    """One AdamW step vs a hand-rolled numpy reference."""
+    opt = OptConfig(lr=1e-2, beta1=0.9, beta2=0.999, eps=1e-8,
+                    weight_decay=0.01, clip=1e9, warmup_steps=0,
+                    min_lr_ratio=1.0)
+    rng = np.random.default_rng(0)
+    p = {"w": jnp.asarray(rng.standard_normal(8), jnp.float32)}
+    g = {"w": jnp.asarray(rng.standard_normal(8), jnp.float32)}
+    st = adamw_init(p, opt)
+    new_p, new_st, _ = adamw_update(p, g, st, 0, opt)
+    m = 0.1 * np.asarray(g["w"])
+    v = 0.001 * np.asarray(g["w"]) ** 2
+    mhat = m / (1 - 0.9)
+    vhat = v / (1 - 0.999)
+    want = (np.asarray(p["w"]) - 1e-2 * (mhat / (np.sqrt(vhat) + 1e-8)
+            + 0.01 * np.asarray(p["w"])))
+    np.testing.assert_allclose(np.asarray(new_p["w"]), want, rtol=1e-5)
+
+
+def test_grad_clipping():
+    opt = OptConfig(clip=1.0, weight_decay=0.0)
+    p = {"w": jnp.ones(4)}
+    g = {"w": jnp.full(4, 100.0)}
+    st = adamw_init(p, opt)
+    _, _, metrics = adamw_update(p, g, st, 0, opt)
+    assert float(metrics["grad_norm"]) == pytest.approx(200.0)
+
+
+def test_microbatch_equivalence():
+    """n_micro=2 produces (nearly) the same update as n_micro=1."""
+    cfg = smoke_config("qwen3-4b")
+    tc1 = TrainConfig(n_micro=1)
+    tc2 = TrainConfig(n_micro=2)
+    state1 = init_state(cfg, tc1, KEY)
+    state2 = jax.tree.map(lambda x: x, state1)
+    ds = SyntheticLM(vocab=cfg.vocab, seq_len=32, global_batch=4)
+    batch = jax.tree.map(jnp.asarray, make_batch(ds, 0))
+    s1, m1 = jax.jit(make_train_step(cfg, tc1))(state1, batch)
+    s2, m2 = jax.jit(make_train_step(cfg, tc2))(state2, batch)
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                               rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(s1["params"]),
+                    jax.tree.leaves(s2["params"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-5)
+
+
+@pytest.mark.parametrize("arch,steps,margin", [
+    ("qwen2-0.5b", 25, 0.2),
+    ("mamba2-2.7b", 25, 0.2),
+    ("olmoe-1b-7b", 45, 0.1),   # 64-expert routing learns slower
+])
+def test_loss_decreases(arch, steps, margin):
+    from repro.launch.train import train_loop
+    cfg = smoke_config(arch)
+    shape = ShapeConfig("t", 64, 4, "train")
+    _, losses = train_loop(cfg, shape, steps=steps,
+                           tc=TrainConfig(opt=OptConfig(
+                               lr=1e-2, warmup_steps=5,
+                               total_steps=steps)),
+                           log_every=1000, print_fn=lambda *a: None)
+    first = np.mean(losses[:5])
+    last = np.mean(losses[-5:])
+    assert last < first - margin, (first, last)
+
+
+def test_quantized_forward_close_to_f32():
+    from repro.quant.apply import quantize_params
+    cfg = smoke_config("qwen3-4b")
+    params = init_params(model_schema(cfg), KEY)
+    B, S = 2, 32
+    batch = {"tokens": jax.random.randint(KEY, (B, S), 0, cfg.vocab),
+             "labels": jax.random.randint(KEY, (B, S), 0, cfg.vocab)}
+    from repro.models import forward_logits
+    lg_f32, _ = forward_logits(params, batch, cfg, mode="prefill")
+    qparams, deq = quantize_params(params, cfg, "hobflops16")
+    lg_q, _ = forward_logits(qparams, batch, cfg, mode="prefill",
+                             deq=deq)
+    # hobflops16 (e5m10) weight storage ~ half-precision weights
+    err = np.abs(np.asarray(lg_q) - np.asarray(lg_f32)).max()
+    scale = np.abs(np.asarray(lg_f32)).max()
+    assert err < 0.05 * scale, (err, scale)
+
+
+def test_quantized_bytes_accounting():
+    from repro.quant.apply import quantize_params, quantized_bytes
+    cfg = smoke_config("gemma-2b")
+    params = init_params(model_schema(cfg), KEY)
+    qp, _ = quantize_params(params, cfg, "hobflops9")
+    qb, db = quantized_bytes(qp)
+    assert qb > 0 and db > 0
+    # 9-bit storage ~= 9/16 of bf16 plus per-layer scale overhead
+    assert qb < 0.60 * db
+
+
+def test_quantized_decode_untied_logits():
+    """Full serve path with bitplane weights incl. an untied (quantized)
+    logits head."""
+    from repro.models import decode_step, prefill
+    from repro.quant.apply import quantize_params
+    cfg = smoke_config("llama3-405b")   # untied -> logits head quantized
+    params = init_params(model_schema(cfg), KEY)
+    qp, deq = quantize_params(params, cfg, "hobflops9")
+    batch = {"tokens": jax.random.randint(KEY, (2, 16), 0, cfg.vocab)}
+    cache, lg, length = prefill(qp, batch, cfg, max_len=20, deq=deq)
+    assert bool(jnp.all(jnp.isfinite(lg)))
+    tok = jnp.argmax(lg, -1).astype(jnp.int32)
+    lg2, _ = decode_step(qp, tok, cache, jnp.asarray(length, jnp.int32),
+                         cfg, deq=deq)
+    assert bool(jnp.all(jnp.isfinite(lg2)))
+
+
+def test_bitplane2d_roundtrip():
+    from repro.kernels.dequant_matmul.ops import pack_weights
+    from repro.quant.storage import dequantize, quantize
+    from repro.core.fpformat import StorageFormat
+    rng = np.random.default_rng(0)
+    w = rng.standard_normal((48, 64)).astype(np.float32)
+    sfmt = StorageFormat(5, 3)
+    qt2d = pack_weights(w, sfmt)          # bitplane2d layout
+    qtfl = quantize(w, sfmt, "bitplane")  # flat layout
+    np.testing.assert_array_equal(np.asarray(dequantize(qt2d)),
+                                  np.asarray(dequantize(qtfl)))
+
+
+def test_abstract_quantize_matches_real():
+    """Abstract quantized tree has the same structure/shapes as the
+    dry-run expects (bitplane2d leaves, per-layer scales)."""
+    from repro.models.schema import abstract_params
+    from repro.quant.apply import abstract_quantize_params
+    from repro.quant.storage import QuantizedTensor
+    cfg = smoke_config("llama3-405b")
+    ab = abstract_quantize_params(
+        abstract_params(model_schema(cfg)), cfg, "hobflops9")
+    wq = ab["blocks"]["b0"]["attn"]["wq"]
+    assert isinstance(wq, QuantizedTensor)
+    L = cfg.n_layers
+    assert wq.data.shape[0] == L and wq.data.shape[1] == 9
+    assert wq.scale.shape == (L,)
