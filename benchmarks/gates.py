@@ -2,19 +2,27 @@
 precision, per cell library, per rounding mode — plus our TPU-VPU
 library.  The paper's claim that synthesis area tracks software op count
 (and hence throughput) is checked against the macs.py measurements.
+
+Counts come from the post-mapping optimization pipeline
+(``opt.optimize_mapped``: const-prop, remap iteration, ANDN absorption,
+dead-node sweep) — the Genus+ABC area pass of the flow.  A second table
+reports the fused K-step chain (``build_mac_chain``) as gates/MAC
+against K independent MACs, the paper's "share the netlist across the
+dot product" lever (DESIGN.md §3).
 """
 from __future__ import annotations
 
 import time
 
-from repro.core.fpcore import build_mac
+from repro.core.fpcore import build_mac, build_mac_chain
 from repro.core.fpformat import HOBFLOPS_FORMATS, RNE, RTZ
-from repro.core.opt import CELL_LIBS, tech_map
+from repro.core.opt import lib_gate_count, optimize_mapped
 
 LIBS = ("avx2", "neon", "avx512", "tpu_vpu")
 FORMATS = ["hobflops8", "hobflops9", "hobflops10", "hobflops11",
            "hobflops12", "hobflops13", "hobflops14", "hobflops15",
            "hobflops16", "hobflops_ieee8"]
+CHAIN_K = 4
 
 
 def gate_table(extended: bool = False, roundings=(RNE, RTZ),
@@ -31,9 +39,37 @@ def gate_table(extended: bool = False, roundings=(RNE, RTZ),
                    "depth": g.depth(),
                    "build_s": round(time.time() - t0, 2)}
             for lib in LIBS:
-                mapped = tech_map(g, CELL_LIBS[lib]())
-                row[lib] = mapped.live_gate_count()
+                row[lib] = lib_gate_count(optimize_mapped(g, lib), lib)
             rows.append(row)
+    return rows
+
+
+def chain_table(formats, k: int = CHAIN_K, rounding: str = RNE,
+                extended: bool = False, mac_gates: dict | None = None):
+    """Gates/MAC of the fused k-step chain vs k independent MACs.
+
+    ``mac_gates`` maps (format, lib) -> already-computed single-MAC
+    optimized gate count (from :func:`gate_table`) to avoid re-running
+    the mapper on the same netlists."""
+    rows = []
+    for name in formats:
+        fmt = HOBFLOPS_FORMATS[name]
+        row = {"format": name, "k": k, "rounding": rounding}
+        for lib in LIBS:
+            single = (mac_gates or {}).get((name, lib))
+            if single is None:
+                single = lib_gate_count(
+                    optimize_mapped(build_mac(fmt, extended, rounding),
+                                    lib), lib)
+            chain = lib_gate_count(
+                optimize_mapped(build_mac_chain(fmt, k, extended, rounding),
+                                lib), lib)
+            row[lib] = {
+                "mac_gates": single,
+                "chain_gates_per_mac": chain / k,
+                "saving_pct": 100.0 * (k * single - chain) / (k * single),
+            }
+        rows.append(row)
     return rows
 
 
@@ -48,7 +84,24 @@ def run(quick: bool = False):
         out.append(f"{r['format']},{r['rounding']},{r['raw_gates']},"
                    f"{r['avx2']},{r['neon']},{r['avx512']},"
                    f"{r['tpu_vpu']},{r['depth']}")
-    return "\n".join(out), rows
+
+    chain_formats = ["hobflops8", "hobflops9", "hobflops16"]
+    mac_gates = {(r["format"], lib): r[lib] for r in rows
+                 if r["rounding"] == RNE and not r["format"].endswith("e")
+                 for lib in LIBS}
+    chains = chain_table(chain_formats, mac_gates=mac_gates)
+    out.append("")
+    out.append("format,k,lib,mac_gates,chain_gates_per_mac,saving_pct")
+    for r in chains:
+        for lib in LIBS:
+            c = r[lib]
+            out.append(f"{r['format']},{r['k']},{lib},{c['mac_gates']},"
+                       f"{c['chain_gates_per_mac']:.1f},"
+                       f"{c['saving_pct']:.1f}")
+
+    results = {"mac": rows, "chain": chains, "chain_k": CHAIN_K,
+               "libs": list(LIBS)}
+    return "\n".join(out), results
 
 
 if __name__ == "__main__":

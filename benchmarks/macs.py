@@ -7,44 +7,59 @@ are XLA-compiled on the host CPU backend, which preserves the paper's
 custom format) while the TPU numbers come from the §Roofline dry-run.
 Inputs are pre-transformed (codes / bit planes), matching the paper's
 "IFM and Kernel data pre-transformed to HOBFLOPS" methodology.
+
+Two bitslice variants are measured per format to track the perf
+trajectory (recorded in BENCH_macs.json by ``benchmarks/run.py``):
+
+* ``seed``      — one MAC netlist per channel step (c_unroll=1), the
+                  repo's original hot path.
+* ``chain{K}``  — the fused K-step MAC chain netlist advancing K
+                  channels per step (fewer gates/MAC + fewer scan
+                  steps; DESIGN.md §3).
 """
 from __future__ import annotations
 
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import softfloat as sf
-from repro.core.bitslice import pack_planes
 from repro.core.fpformat import HOBFLOPS_FORMATS, RNE, RTZ, FPFormat
 from repro.kernels.bitslice_mac.ops import _bitslice_mac_jnp, encode_inputs
 
 # Workload: P output pixels x C channels x M kernels (paper Fig. 5).
 P_, C_, M_ = 16, 32, 512
+CHAIN_K = 4
 
 
-def _time(fn, *args, iters=3):
-    out = fn(*args)
-    jax.block_until_ready(out)
-    t0 = time.time()
-    for _ in range(iters):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.time() - t0) / iters
+def _time(fn, *args, iters: int = 3, reps: int = 5):
+    """Best-of-reps mean over iters (robust against scheduler noise)."""
+    jax.block_until_ready(fn(*args))
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = fn(*args)
+        jax.block_until_ready(out)
+        best = min(best, (time.perf_counter() - t0) / iters)
+    return best
 
 
-def bench_bitslice(fmt: FPFormat, rounding: str = RNE,
-                   extended: bool = False):
+def _workload(fmt: FPFormat, rounding: str):
     rng = np.random.default_rng(0)
     i = rng.standard_normal((P_, C_)).astype(np.float32)
     w = rng.standard_normal((C_, M_)).astype(np.float32)
-    i_masks, w_planes = encode_inputs(i, w, fmt, rounding,
-                                      p_block=P_, m_block=M_ // 32,
-                                      c_block=C_)
+    return encode_inputs(i, w, fmt, rounding, p_block=P_,
+                         m_block=M_ // 32, c_block=C_)
+
+
+def bench_bitslice(fmt: FPFormat, rounding: str = RNE,
+                   extended: bool = False, c_unroll: int = 1):
+    i_masks, w_planes = _workload(fmt, rounding)
     fn = jax.jit(lambda a, b: _bitslice_mac_jnp(
-        a, b, fmt=fmt, extended=extended, rounding=rounding))
+        a, b, fmt=fmt, extended=extended, rounding=rounding,
+        c_unroll=c_unroll))
     dt = _time(fn, i_masks, w_planes)
     return (P_ * C_ * M_) / dt, dt
 
@@ -53,6 +68,8 @@ def bench_softfp(fmt: FPFormat, rounding: str = RNE,
                  extended: bool = False):
     """Word-parallel integer-op FP emulation (the SoftFP analogue) over
     the same MAC count."""
+    import jax.numpy as jnp
+
     rng = np.random.default_rng(0)
     fmt_out = fmt.mult_out(extended)
     ic = sf.encode(rng.standard_normal((P_, C_)), fmt)
@@ -79,6 +96,8 @@ def bench_softfp(fmt: FPFormat, rounding: str = RNE,
 
 
 def bench_native_f32():
+    import jax.numpy as jnp
+
     rng = np.random.default_rng(0)
     i = jnp.asarray(rng.standard_normal((P_, C_)), jnp.float32)
     w = jnp.asarray(rng.standard_normal((C_, M_)), jnp.float32)
@@ -95,24 +114,40 @@ def run(quick: bool = False):
     formats = ["hobflops8", "hobflops9", "hobflops16"] if quick \
         else FORMATS_FULL
     rows = ["impl,format,rounding,macs_per_s,us_per_call"]
+    results = {"workload": {"P": P_, "C": C_, "M": M_,
+                            "macs": P_ * C_ * M_},
+               "chain_k": CHAIN_K, "formats": {}}
     f32_rate, f32_dt = bench_native_f32()
     rows.append(f"native_f32,f32,-,{f32_rate:.3e},{f32_dt*1e6:.1f}")
+    results["native_f32_macs_per_s"] = f32_rate
     sf_rate, sf_dt = bench_softfp(HOBFLOPS_FORMATS["hobflops16"])
     rows.append(f"softfp_word,hobflops16,rne,{sf_rate:.3e},"
                 f"{sf_dt*1e6:.1f}")
-    results = {"softfp16": sf_rate, "f32": f32_rate}
+    results["softfp16_macs_per_s"] = sf_rate
     for name in formats:
+        fmt = HOBFLOPS_FORMATS[name]
+        per_fmt = results["formats"].setdefault(name, {})
         for rounding in ((RNE,) if quick else (RNE, RTZ)):
-            rate, dt = bench_bitslice(HOBFLOPS_FORMATS[name], rounding)
-            rows.append(f"hobflops_bitslice,{name},{rounding},"
-                        f"{rate:.3e},{dt*1e6:.1f}")
-            results[(name, rounding)] = rate
+            seed_rate, seed_dt = bench_bitslice(fmt, rounding, c_unroll=1)
+            chain_rate, chain_dt = bench_bitslice(fmt, rounding,
+                                                  c_unroll=CHAIN_K)
+            rows.append(f"hobflops_bitslice_seed,{name},{rounding},"
+                        f"{seed_rate:.3e},{seed_dt*1e6:.1f}")
+            rows.append(f"hobflops_bitslice_chain{CHAIN_K},{name},"
+                        f"{rounding},{chain_rate:.3e},{chain_dt*1e6:.1f}")
+            per_fmt[rounding] = {
+                "seed_macs_per_s": seed_rate,
+                f"chain{CHAIN_K}_macs_per_s": chain_rate,
+                "speedup_vs_seed": chain_rate / seed_rate,
+            }
     for name in (["hobflops9"] if quick else ["hobflops8", "hobflops9",
                                               "hobflops16"]):
         rate, dt = bench_bitslice(HOBFLOPS_FORMATS[name], RNE,
-                                  extended=True)
-        rows.append(f"hobflops_bitslice,{name}e,rne,{rate:.3e},"
-                    f"{dt*1e6:.1f}")
+                                  extended=True, c_unroll=CHAIN_K)
+        rows.append(f"hobflops_bitslice_chain{CHAIN_K},{name}e,rne,"
+                    f"{rate:.3e},{dt*1e6:.1f}")
+        results["formats"].setdefault(name + "e", {})["rne"] = {
+            f"chain{CHAIN_K}_macs_per_s": rate}
     return "\n".join(rows), results
 
 

@@ -6,12 +6,29 @@
   roofline   — assembled dry-run roofline table (§Roofline), if
                experiments/dryrun has been populated
 
-Prints ``name,us_per_call,derived`` CSV blocks per section.
+Prints ``name,us_per_call,derived`` CSV blocks per section.  The
+``gates`` and ``macs`` sections additionally write machine-readable
+``BENCH_gates.json`` / ``BENCH_macs.json`` (gates/MAC per format +
+library; MACs/s per format) so successive PRs have a perf trajectory:
+
+    python benchmarks/run.py --quick --only macs,gates
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import time
+
+_JSON_SECTIONS = ("gates", "macs")
+
+
+def _write_json(out_dir: str, section: str, results) -> str:
+    path = os.path.join(out_dir, f"BENCH_{section}.json")
+    with open(path, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path
 
 
 def main(argv=None):
@@ -20,6 +37,8 @@ def main(argv=None):
                     help="small format subset (CI-speed)")
     ap.add_argument("--only", default=None,
                     help="comma list: gates,macs,conv,roofline")
+    ap.add_argument("--out-dir", default=".",
+                    help="directory for BENCH_<section>.json files")
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
     sections = [s for s in ("gates", "macs", "conv", "roofline")
@@ -31,17 +50,20 @@ def main(argv=None):
         try:
             if sec == "gates":
                 from benchmarks import gates
-                text, _ = gates.run(quick=args.quick)
+                text, results = gates.run(quick=args.quick)
             elif sec == "macs":
                 from benchmarks import macs
-                text, _ = macs.run(quick=args.quick)
+                text, results = macs.run(quick=args.quick)
             elif sec == "conv":
                 from benchmarks import conv_layer
-                text, _ = conv_layer.run(quick=args.quick)
+                text, results = conv_layer.run(quick=args.quick)
             else:
                 from benchmarks import roofline
-                text, _ = roofline.run(quick=args.quick)
+                text, results = roofline.run(quick=args.quick)
             print(text, flush=True)
+            if sec in _JSON_SECTIONS:
+                path = _write_json(args.out_dir, sec, results)
+                print(f"wrote {path}", flush=True)
         except Exception as e:  # keep the harness going
             print(f"SECTION-ERROR {sec}: {type(e).__name__}: {e}",
                   flush=True)

@@ -1,13 +1,26 @@
-"""Dev script: exhaustive circuit-vs-oracle check for small formats."""
+"""Dev script: exhaustive circuit-vs-oracle check for small formats.
+
+Runs the FloPoCo-testbench analogue: every canonical operand pair
+through the gate-level netlists vs the softfloat oracle, plus a fused
+MAC-chain vs sequential-MAC equivalence sweep.  Importable (the tier-1
+suite runs :func:`run_checks` via ``tests/test_tooling.py``) and
+runnable standalone::
+
+    python scripts/dev_check_circuits.py [--quick]
+"""
+import argparse
+import os
 import sys
+
 import numpy as np
 
-sys.path.insert(0, "/root/repo/src")
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                os.pardir, "src"))
 
 from repro.core import softfloat as sf
 from repro.core.bitslice import pack_planes_np, unpack_planes_np
 from repro.core.codegen import eval_netlist
-from repro.core.fpcore import build_add, build_mul
+from repro.core.fpcore import build_add, build_mac, build_mac_chain, build_mul
 from repro.core.fpformat import (EXC_INF, EXC_NAN, EXC_NORMAL, EXC_ZERO, RNE,
                                  RTZ, FPFormat)
 
@@ -54,14 +67,56 @@ def check(fmt_in, fmt_out, rounding, op):
     return True
 
 
-if __name__ == "__main__":
+def check_chain(fmt_in, k, rounding=RNE, n=8192, seed=0):
+    """Random-vector equivalence: build_mac_chain == k x build_mac."""
+    fmt_out = fmt_in.mult_out()
+    rng = np.random.default_rng(seed)
+    cc = all_canonical_codes(fmt_in)
+    co = all_canonical_codes(fmt_out)
+    xs = [cc[rng.integers(0, len(cc), n)] for _ in range(k)]
+    ys = [cc[rng.integers(0, len(cc), n)] for _ in range(k)]
+    acc = co[rng.integers(0, len(co), n)]
+
+    g1 = build_mac(fmt_in, rounding=rounding)
+    cur = acc
+    for x, y in zip(xs, ys):
+        planes = {"x": pack_planes_np(x, fmt_in.nbits),
+                  "y": pack_planes_np(y, fmt_in.nbits),
+                  "acc": pack_planes_np(cur, fmt_out.nbits)}
+        cur = unpack_planes_np(eval_netlist(g1, planes)["out"], n)
+
+    gc = build_mac_chain(fmt_in, k, rounding=rounding)
+    planes = {f"x{i}": pack_planes_np(xs[i], fmt_in.nbits) for i in range(k)}
+    planes |= {f"y{i}": pack_planes_np(ys[i], fmt_in.nbits) for i in range(k)}
+    planes["acc"] = pack_planes_np(acc, fmt_out.nbits)
+    got = unpack_planes_np(eval_netlist(gc, planes)["out"], n)
+    bad = int((got != cur).sum())
+    print(f"mac-chain {fmt_in} k={k} {rounding}: {n} vectors, "
+          f"{bad} mismatches, gates={gc.live_gate_count()} "
+          f"(k*mac={k * g1.live_gate_count()})")
+    return bad == 0
+
+
+def run_checks(quick: bool = False) -> bool:
     ok = True
     f32 = FPFormat(3, 2)
     ok &= check(f32, f32.mult_out(), RNE, "mul")
-    ok &= check(f32, f32.mult_out(True), RNE, "mul")
-    ok &= check(f32, f32.mult_out(), RTZ, "mul")
     ok &= check(FPFormat(3, 3), FPFormat(3, 3), RNE, "add")
-    ok &= check(FPFormat(3, 3), FPFormat(3, 3), RTZ, "add")
-    ok &= check(FPFormat(4, 2), FPFormat(4, 2), RNE, "add")
+    ok &= check_chain(f32, 2, RNE)
+    if not quick:
+        ok &= check(f32, f32.mult_out(True), RNE, "mul")
+        ok &= check(f32, f32.mult_out(), RTZ, "mul")
+        ok &= check(FPFormat(3, 3), FPFormat(3, 3), RTZ, "add")
+        ok &= check(FPFormat(4, 2), FPFormat(4, 2), RNE, "add")
+        ok &= check_chain(f32, 4, RTZ)
+        ok &= check_chain(FPFormat(5, 2), 4, RNE)
+    return ok
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    ok = run_checks(quick=args.quick)
     print("ALL OK" if ok else "FAILURES")
     sys.exit(0 if ok else 1)

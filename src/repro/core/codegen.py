@@ -20,6 +20,7 @@ G++ register allocation.
 """
 from __future__ import annotations
 
+import weakref
 from typing import Callable
 
 import numpy as np
@@ -38,6 +39,56 @@ def _schedule(graph: Graph):
             if ch >= 0:
                 last_use[ch] = pos
     return order, last_use
+
+
+def _slot_schedule(graph: Graph):
+    """Register-allocated emission schedule.
+
+    Returns ``(steps, nslots, out_wires)``.  Each step is
+    ``(node_id, slot, child_slots, free_after)``: evaluate the node into
+    ``slot``, reading operands from ``child_slots`` (-1 marks the
+    FALSE/TRUE constants, resolved via the node's child ids), then
+    return the ``free_after`` slots to the pool.  Output wires stay
+    pinned for the whole schedule.  ``out_wires[name]`` is a list of
+    ``("slot", s)`` / ``("const", 0|1)`` descriptors per bus bit.
+    ``nslots`` is the peak register count — the analogue of the paper's
+    topological sort + G++ register allocation over the generated C.
+    """
+    order, last_use = _schedule(graph)
+    pinned = {w for bus in graph.outputs.values() for w in bus}
+    slot_of: dict[int, int] = {}
+    free: list[int] = []
+    nslots = 0
+    steps = []
+    for pos, nid in enumerate(order):
+        n = graph.nodes[nid]
+        if nid in (FALSE, TRUE) or n.op == OP_CONST:
+            continue
+        if free:
+            slot = free.pop()
+        else:
+            slot = nslots
+            nslots += 1
+        slot_of[nid] = slot
+        children = [ch for ch in (n.a, n.b, n.c) if ch >= 0]
+        child_slots = tuple(slot_of.get(ch, -1) for ch in children)
+        free_after = [slot_of[ch] for ch in set(children)
+                      if ch in slot_of and ch not in pinned
+                      and last_use.get(ch, -1) == pos]
+        steps.append((nid, slot, child_slots, free_after))
+        free.extend(free_after)
+    out_wires = {}
+    for name, bus in graph.outputs.items():
+        descs = []
+        for w in bus:
+            if w in slot_of:
+                descs.append(("slot", slot_of[w]))
+            else:
+                node = graph.nodes[w]
+                assert node.op == OP_CONST, f"unscheduled output wire {w}"
+                descs.append(("const", 1 if node.aux else 0))
+        out_wires[name] = descs
+    return steps, nslots, out_wires
 
 
 # ---------------------------------------------------------------------------
@@ -104,65 +155,90 @@ def eval_netlist(graph: Graph, inputs: dict[str, np.ndarray],
 # ---------------------------------------------------------------------------
 # JAX emission
 # ---------------------------------------------------------------------------
+# One compiled fn per live Graph object: repeated launches of the same
+# netlist (every kernel call, every scan trace) reuse the schedule and
+# the closure instead of re-running register allocation.
+_FN_CACHE: "weakref.WeakKeyDictionary[Graph, Callable]" = \
+    weakref.WeakKeyDictionary()
+
+
 def make_jax_fn(graph: Graph) -> Callable:
     """Returns f(**{name: planes}) -> {name: planes} traceable by JAX.
 
     Planes are int arrays [width, ...lanes]; each gate traces to one
     bitwise XLA op (MUX/LUT3 expand to their 2-input forms — the TPU VPU
-    has no ternary bitwise instruction, see DESIGN.md).
+    has no ternary bitwise instruction, see DESIGN.md §2).
+
+    Gates execute on a slot-allocated schedule: temporaries are freed at
+    their last use and slots reused, so the trace's peak live-value set
+    matches a register-allocated C emission rather than growing with the
+    netlist (and JAX's tracer never holds dead intermediates).
+    Results are cached per Graph instance.
     """
+    cached = _FN_CACHE.get(graph)
+    if cached is not None:
+        return cached
+
     import jax.numpy as jnp
 
-    order, _ = _schedule(graph)
+    steps, nslots, out_wires = _slot_schedule(graph)
     nodes = graph.nodes
-    outputs = dict(graph.outputs)
 
     def fn(**inputs):
         sample = next(iter(inputs.values()))
         zeros = jnp.zeros_like(sample[0])
         ones = ~zeros
-        val: dict[int, object] = {FALSE: zeros, TRUE: ones}
-        for nid in order:
-            if nid in val:
-                continue
+        env: list = [None] * nslots
+
+        def rd(slot, child):
+            if slot >= 0:
+                return env[slot]
+            return ones if child == TRUE else zeros
+
+        for nid, slot, cs, free_after in steps:
             n = nodes[nid]
             if n.op == OP_INPUT:
                 name, bit = n.aux
-                val[nid] = inputs[name][bit]
+                v = inputs[name][bit]
             elif n.op == OP_NOT:
-                val[nid] = ~val[n.a]
+                v = ~rd(cs[0], n.a)
             elif n.op == OP_AND:
-                val[nid] = val[n.a] & val[n.b]
+                v = rd(cs[0], n.a) & rd(cs[1], n.b)
             elif n.op == OP_OR:
-                val[nid] = val[n.a] | val[n.b]
+                v = rd(cs[0], n.a) | rd(cs[1], n.b)
             elif n.op == OP_XOR:
-                val[nid] = val[n.a] ^ val[n.b]
+                v = rd(cs[0], n.a) ^ rd(cs[1], n.b)
             elif n.op == OP_ANDN:
-                val[nid] = val[n.a] & ~val[n.b]
+                v = rd(cs[0], n.a) & ~rd(cs[1], n.b)
             elif n.op == OP_MUX:
-                s, a, b = val[n.a], val[n.b], val[n.c]
-                val[nid] = b ^ (s & (a ^ b))   # 3-op mux
+                s, a, b = rd(cs[0], n.a), rd(cs[1], n.b), rd(cs[2], n.c)
+                v = b ^ (s & (a ^ b))   # 3-op mux
             elif n.op == OP_LUT3:
-                a, b, c = val[n.a], val[n.b], val[n.c]
+                a, b, c = rd(cs[0], n.a), rd(cs[1], n.b), rd(cs[2], n.c)
                 tt = n.aux
-                acc = zeros
+                v = zeros
                 for m in range(8):
                     if (tt >> m) & 1:
                         t = (a if m & 1 else ~a)
                         t = t & (b if m & 2 else ~b)
                         t = t & (c if m & 4 else ~c)
-                        acc = acc | t
-                val[nid] = acc
+                        v = v | t
             else:  # pragma: no cover
                 raise ValueError(f"bad op {n.op}")
+            for f in free_after:
+                env[f] = None
+            env[slot] = v
         out = {}
-        for name, bus in outputs.items():
-            planes = [val[w] for w in bus]
-            shape = jnp.broadcast_shapes(*(p.shape for p in planes))
+        for name, descs in out_wires.items():
+            planes = [env[s] if kind == "slot" else (ones if s else zeros)
+                      for kind, s in descs]
+            shape = jnp.broadcast_shapes(*(getattr(p, "shape", ())
+                                           for p in planes))
             out[name] = jnp.stack([jnp.broadcast_to(p, shape)
                                    for p in planes])
         return out
 
+    _FN_CACHE[graph] = fn
     return fn
 
 

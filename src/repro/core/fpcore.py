@@ -9,8 +9,22 @@ bit-exact agreement, exhaustively for small formats.
 Circuits assume *canonical* input codes (non-normal values carry zero
 exponent/fraction fields), which is what ``softfloat.pack`` and
 ``softfloat.encode`` produce, and they emit canonical outputs.
+
+Internally the datapath operates on an *unpacked* value (:class:`FPVal`:
+decoded exception flags + sign + raw exponent/fraction wires).  Packing
+to the canonical code layout masks the fields of non-normal values and
+re-encodes the exception bits; unpacking re-decodes them.  A fused
+multi-step pipeline (``build_mac_chain``) keeps intermediate results in
+unpacked form, so the pack/unpack canonicalization — and its gates — is
+paid once per chain instead of once per accumulation step.  This is
+sound because every consumer of an FPVal either gates the field wires
+by the ``normal`` flag or selects the result from the flags alone, so
+garbage exponent/fraction wires on non-normal values never reach an
+output (DESIGN.md §3).
 """
 from __future__ import annotations
+
+import dataclasses
 
 from . import blocks as B
 from .circuit import FALSE, TRUE, Graph
@@ -22,6 +36,22 @@ _GUARD = 3  # must match softfloat._GUARD
 # ---------------------------------------------------------------------------
 # Field helpers
 # ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class FPVal:
+    """An FP value as wires: one-hot exception flags + raw datapath fields.
+
+    ``exp``/``frac`` are only meaningful when ``normal`` is set; packing
+    masks them to zero otherwise (the canonical encoding).
+    """
+    zero: int
+    normal: int
+    inf: int
+    nan: int
+    sign: int
+    exp: list[int]
+    frac: list[int]
+
+
 def split_fields(bus: list[int], fmt: FPFormat):
     """code bus (LSB first) -> (exc2, sign, exp, frac) wire groups."""
     f = bus[0:fmt.w_f]
@@ -38,6 +68,24 @@ def exc_flags(g: Graph, exc: list[int]):
             g.AND(g.NOT(e1), e0),
             g.AND(e1, g.NOT(e0)),
             g.AND(e1, e0))
+
+
+def unpack_val(g: Graph, bus: list[int], fmt: FPFormat) -> FPVal:
+    """Canonical code bus -> unpacked FPVal (flags decoded)."""
+    exc, s, e, f = split_fields(bus, fmt)
+    zero, normal, inf, nan = exc_flags(g, exc)
+    return FPVal(zero, normal, inf, nan, s, list(e), list(f))
+
+
+def pack_val(g: Graph, v: FPVal, fmt: FPFormat) -> list[int]:
+    """Unpacked FPVal -> canonical code bus (fields masked unless normal)."""
+    bus = [g.AND(b, v.normal) for b in v.frac[:fmt.w_f]]
+    bus += [g.AND(b, v.normal) for b in v.exp[:fmt.w_e]]
+    exc1 = g.OR(v.nan, v.inf)
+    exc0 = g.OR(v.nan, v.normal)
+    bus += [v.sign, exc0, exc1]
+    assert len(bus) == fmt.nbits
+    return bus
 
 
 def pack_fields(g: Graph, exc0: int, exc1: int, sign: int,
@@ -64,16 +112,15 @@ def _round_bits(g: Graph, kept: list[int], rnd: int, sticky: int,
 # ---------------------------------------------------------------------------
 # Multiplier
 # ---------------------------------------------------------------------------
-def mul_wires(g: Graph, x: list[int], y: list[int], fmt_in: FPFormat,
-              fmt_out: FPFormat, rounding: str = RNE) -> list[int]:
+def mul_val(g: Graph, xv: FPVal, yv: FPVal, fmt_in: FPFormat,
+            fmt_out: FPFormat, rounding: str = RNE) -> FPVal:
+    """Unpacked-domain FP multiply: FPVal x FPVal -> FPVal."""
     assert fmt_out.w_e == fmt_in.w_e
     wf, we = fmt_in.w_f, fmt_in.w_e
-    exc_x, sx, ex, fx = split_fields(x, fmt_in)
-    exc_y, sy, ey, fy = split_fields(y, fmt_in)
-    x_zero, x_norm, x_inf, x_nan = exc_flags(g, exc_x)
-    y_zero, y_norm, y_inf, y_nan = exc_flags(g, exc_y)
+    fx, ex = xv.frac, xv.exp
+    fy, ey = yv.frac, yv.exp
 
-    sign = g.XOR(sx, sy)
+    sign = g.XOR(xv.sign, yv.sign)
 
     # Exact significand product (2wf+2 bits).
     prod = B.mul_unsigned(g, fx + [TRUE], fy + [TRUE])
@@ -105,6 +152,8 @@ def mul_wires(g: Graph, x: list[int], y: list[int], fmt_in: FPFormat,
     underflow = neg
     overflow = g.AND(g.NOT(neg), e_res[we])
 
+    x_zero, x_norm, x_inf, x_nan = xv.zero, xv.normal, xv.inf, xv.nan
+    y_zero, y_norm, y_inf, y_nan = yv.zero, yv.normal, yv.inf, yv.nan
     nan = g.OR(g.OR(x_nan, y_nan),
                g.OR(g.AND(x_inf, y_zero), g.AND(x_zero, y_inf)))
     inf_raw = g.OR(g.OR(g.AND(x_inf, g.OR(y_inf, y_norm)),
@@ -115,18 +164,19 @@ def mul_wires(g: Graph, x: list[int], y: list[int], fmt_in: FPFormat,
                          g.AND(y_zero, x_norm)),
                     g.AND(g.AND(x_norm, y_norm), underflow))
     zero = g.AND(g.AND(g.NOT(nan), g.NOT(inf)), zero_raw)
-
-    # exc encoding: zero=00 normal=01 inf=10 nan=11
-    exc1 = g.OR(nan, inf)
-    exc0 = g.OR(nan, g.AND(g.NOT(g.OR(inf, zero)), TRUE))
-    # exc0 = nan | normal;  normal = !nan & !inf & !zero
     normal = g.AND(g.NOT(nan), g.AND(g.NOT(inf), g.NOT(zero)))
-    exc0 = g.OR(nan, normal)
 
     # underflow-flushed zeros are +0; zero-operand products keep XOR sign
     uf_zero = g.AND(g.AND(g.AND(x_norm, y_norm), underflow), zero)
     sign_out = g.AND(sign, g.NOT(g.OR(nan, uf_zero)))
-    return pack_fields(g, exc0, exc1, sign_out, e_res[:we], frac_r, fmt_out)
+    return FPVal(zero, normal, inf, nan, sign_out, e_res[:we], frac_r)
+
+
+def mul_wires(g: Graph, x: list[int], y: list[int], fmt_in: FPFormat,
+              fmt_out: FPFormat, rounding: str = RNE) -> list[int]:
+    v = mul_val(g, unpack_val(g, x, fmt_in), unpack_val(g, y, fmt_in),
+                fmt_in, fmt_out, rounding)
+    return pack_val(g, v, fmt_out)
 
 
 def build_mul(fmt_in: FPFormat, fmt_out: FPFormat,
@@ -141,20 +191,29 @@ def build_mul(fmt_in: FPFormat, fmt_out: FPFormat,
 # ---------------------------------------------------------------------------
 # Adder
 # ---------------------------------------------------------------------------
-def add_wires(g: Graph, x: list[int], y: list[int], fmt: FPFormat,
-              rounding: str = RNE) -> list[int]:
+def add_val(g: Graph, xv: FPVal, yv: FPVal, fmt: FPFormat,
+            rounding: str = RNE) -> FPVal:
+    """Unpacked-domain FP add: FPVal + FPVal -> FPVal.
+
+    Tolerates garbage exp/frac wires on non-normal inputs: the swap
+    comparison key carries the ``normal`` flag as its MSB (so a normal
+    value always outranks a non-normal one), significands are gated by
+    the normal flags before the datapath, and all non-normal outcomes
+    are selected by the flag logic alone.
+    """
     wf, we, G = fmt.w_f, fmt.w_e, _GUARD
     W = wf + 1 + G
     assert wf + G + 2 < (1 << (we + 1)), "exponent range too small for datapath"
-    exc_x, sx, ex, fx = split_fields(x, fmt)
-    exc_y, sy, ey, fy = split_fields(y, fmt)
-    x_zero, x_norm, x_inf, x_nan = exc_flags(g, exc_x)
-    y_zero, y_norm, y_inf, y_nan = exc_flags(g, exc_y)
+    sx, ex, fx = xv.sign, xv.exp, xv.frac
+    sy, ey, fy = yv.sign, yv.exp, yv.frac
+    x_zero, x_norm, x_inf, x_nan = xv.zero, xv.normal, xv.inf, xv.nan
+    y_zero, y_norm, y_inf, y_nan = yv.zero, yv.normal, yv.inf, yv.nan
 
-    # Magnitude comparison key: (normal, exp, frac); canonical non-normals
-    # have zero fields so they always lose against normals.
-    key_x = fx + ex + [x_norm]
-    key_y = fy + ey + [y_norm]
+    # Magnitude comparison key: (normal, exp, frac); non-normals carry
+    # the normal flag as MSB so they always lose against normals, and
+    # garbage fields between two non-normals never affect the result.
+    key_x = list(fx) + list(ex) + [x_norm]
+    key_y = list(fy) + list(ey) + [y_norm]
     swap = B.ult(g, key_x, key_y)
 
     s_big = g.MUX(swap, sy, sx)
@@ -170,7 +229,7 @@ def add_wires(g: Graph, x: list[int], y: list[int], fmt: FPFormat,
     sig_sml_full = ([FALSE] * G + [g.AND(b, sml_norm) for b in f_sml]
                     + [sml_norm])
 
-    d, _ = B.ripple_sub(g, e_big, e_sml)  # >= 0 for canonical inputs
+    d, _ = B.ripple_sub(g, e_big, e_sml)  # >= 0 when both operands normal
     sig_sml, sticky_in = B.shr_barrel(g, sig_sml_full, d, collect_sticky=True)
     sig_sml = [g.OR(sig_sml[0], sticky_in)] + sig_sml[1:]
 
@@ -221,9 +280,6 @@ def add_wires(g: Graph, x: list[int], y: list[int], fmt: FPFormat,
     pass_y = g.AND(y_norm, x_zero)
     normal = g.AND(g.NOT(nan), g.AND(g.NOT(inf), g.NOT(zero)))
 
-    exc1 = g.OR(nan, inf)
-    exc0 = g.OR(nan, normal)
-
     sign = g.MUX(x_inf, sx, g.MUX(y_inf, sy, s_big))
     sign = g.MUX(g.AND(zero, g.NOT(both_zero)), FALSE, sign)
     sign = g.MUX(both_zero, g.AND(sx, sy), sign)
@@ -232,7 +288,14 @@ def add_wires(g: Graph, x: list[int], y: list[int], fmt: FPFormat,
     e_out = B.mux_bus(g, pass_x, ex, B.mux_bus(g, pass_y, ey, e_res[:we]))
     f_out = B.mux_bus(g, pass_x, fx, B.mux_bus(g, pass_y, fy, frac_out))
     sign = g.MUX(pass_x, sx, g.MUX(pass_y, sy, sign))
-    return pack_fields(g, exc0, exc1, sign, e_out, f_out, fmt)
+    return FPVal(zero, normal, inf, nan, sign, e_out, f_out)
+
+
+def add_wires(g: Graph, x: list[int], y: list[int], fmt: FPFormat,
+              rounding: str = RNE) -> list[int]:
+    v = add_val(g, unpack_val(g, x, fmt), unpack_val(g, y, fmt),
+                fmt, rounding)
+    return pack_val(g, v, fmt)
 
 
 def build_add(fmt: FPFormat, rounding: str = RNE) -> Graph:
@@ -255,4 +318,38 @@ def build_mac(fmt_in: FPFormat, extended: bool = False,
     acc = g.input_bus("acc", fmt_out.nbits)
     prod = mul_wires(g, x, y, fmt_in, fmt_out, rounding)
     g.output_bus("out", add_wires(g, prod, acc, fmt_out, rounding))
+    return g
+
+
+# ---------------------------------------------------------------------------
+# Fused K-step MAC chain:
+#   out = add(mul(x[k-1], y[k-1]), ... add(mul(x0, y0), acc) ...)
+# ---------------------------------------------------------------------------
+def build_mac_chain(fmt_in: FPFormat, k: int, extended: bool = False,
+                    rounding: str = RNE) -> Graph:
+    """K MAC steps fused into one netlist, bit-exact to ``k`` sequential
+    :func:`build_mac` applications in channel order.
+
+    Inputs: ``x0..x{k-1}``/``y0..y{k-1}`` (operand format) and ``acc``
+    (accumulator format ``fmt_in.mult_out(extended)``); output ``out``.
+
+    The intermediate accumulator stays in unpacked :class:`FPVal` form
+    between steps, so the canonical pack (field masking + exception
+    re-encode) and the matching unpack (exception re-decode) are elided
+    at every mul->add and add->add boundary — 2k-1 boundaries' worth of
+    gates per chain, paid once at the chain's output instead.
+    """
+    assert k >= 1
+    fmt_out = fmt_in.mult_out(extended)
+    g = Graph()
+    xs = [g.input_bus(f"x{i}", fmt_in.nbits) for i in range(k)]
+    ys = [g.input_bus(f"y{i}", fmt_in.nbits) for i in range(k)]
+    acc = g.input_bus("acc", fmt_out.nbits)
+    accv = unpack_val(g, acc, fmt_out)
+    for i in range(k):
+        xv = unpack_val(g, xs[i], fmt_in)
+        yv = unpack_val(g, ys[i], fmt_in)
+        pv = mul_val(g, xv, yv, fmt_in, fmt_out, rounding)
+        accv = add_val(g, pv, accv, fmt_out, rounding)
+    g.output_bus("out", pack_val(g, accv, fmt_out))
     return g

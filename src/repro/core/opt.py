@@ -346,12 +346,232 @@ def _emit2(g2, tt, leaves, build, fn):
 
 
 # ---------------------------------------------------------------------------
+# Post-mapping netlist optimization passes (the ABC clean-up analogue)
+# ---------------------------------------------------------------------------
+def _lut3_fold(g2: Graph, tt: int, ins: list[int]) -> int:
+    """Emit a 3-input function, specializing constants / duplicate /
+    complementary inputs down to 2-input gates where possible."""
+    # Reduce: substitute constants and merge duplicate/complement inputs.
+    live: list[int] = []        # distinct non-constant inputs, in order
+    pol: list[tuple[int, int]] = []  # per original var: (live index, invert)
+    for w in ins:
+        if w == FALSE or w == TRUE:
+            pol.append((-1, 1 if w == TRUE else 0))
+            continue
+        hit = None
+        for j, u in enumerate(live):
+            if u == w:
+                hit = (j, 0)
+                break
+            if g2._is_compl(u, w):
+                hit = (j, 1)
+                break
+        if hit is None:
+            live.append(w)
+            hit = (len(live) - 1, 0)
+        pol.append(hit)
+    nv = len(live)
+    # Re-express tt over the live variables.
+    tt2 = 0
+    for m in range(1 << nv):
+        idx = 0
+        for i, (j, inv) in enumerate(pol):
+            bit = inv if j < 0 else ((m >> j) & 1) ^ inv
+            idx |= bit << i
+        if (tt >> idx) & 1:
+            tt2 |= 1 << m
+    if nv == 0:
+        return TRUE if tt2 & 1 else FALSE
+    if nv == 1:
+        u = live[0]
+        return {0b00: FALSE, 0b01: g2.NOT(u), 0b10: u, 0b11: TRUE}[tt2 & 3]
+    if nv == 2:
+        return _emit_tt2(g2, tt2 & 0xF, live[0], live[1])
+    if tt2 == 0:
+        return FALSE
+    if tt2 == 0xFF:
+        return TRUE
+    return g2.LUT3(tt2, live[0], live[1], live[2])
+
+
+def _emit_tt2(g2: Graph, tt2: int, u: int, v: int) -> int:
+    """Any 2-variable function as <=2 two-input gates (bit m = f(v,u)
+    at index (v<<1)|u)."""
+    table = {
+        0b0000: lambda: FALSE,          0b1111: lambda: TRUE,
+        0b1010: lambda: u,              0b1100: lambda: v,
+        0b0101: lambda: g2.NOT(u),      0b0011: lambda: g2.NOT(v),
+        0b1000: lambda: g2.AND(u, v),   0b1110: lambda: g2.OR(u, v),
+        0b0110: lambda: g2.XOR(u, v),   0b1001: lambda: g2.XNOR(u, v),
+        0b0111: lambda: g2.NAND(u, v),  0b0001: lambda: g2.NOR(u, v),
+        0b0010: lambda: g2.ANDN(u, v),  0b0100: lambda: g2.ANDN(v, u),
+        0b1011: lambda: g2.OR(u, g2.NOT(v)),
+        0b1101: lambda: g2.OR(v, g2.NOT(u)),
+    }
+    return table[tt2]()
+
+
+def _rebuild(graph: Graph, andn_fanout1: set[int] | None = None) -> Graph:
+    """Rebuild the live cone through the folding constructors.
+
+    This is simultaneously a constant-propagation pass (the constructors
+    fold constant / duplicate / complementary operands; LUT3 truth
+    tables are specialized explicitly) and a dead-node sweep (only the
+    output cone is visited).  When ``andn_fanout1`` is given, AND nodes
+    whose NOT-child id is in the set are re-emitted as fused ANDN cells.
+    """
+    g2 = Graph()
+    remap: dict[int, int] = {FALSE: FALSE, TRUE: TRUE}
+    for nid in graph.topo_order():
+        n = graph.nodes[nid]
+        if nid in (FALSE, TRUE):
+            continue
+        if n.op == OP_INPUT:
+            name, bit = n.aux
+            if name not in g2.inputs:
+                g2.input_bus(name, len(graph.inputs[name]))
+            remap[nid] = g2.inputs[name][bit]
+        elif n.op == OP_CONST:
+            remap[nid] = TRUE if n.aux else FALSE
+        elif n.op == OP_NOT:
+            remap[nid] = g2.NOT(remap[n.a])
+        elif n.op == OP_AND:
+            done = False
+            if andn_fanout1:
+                for x, y in ((n.a, n.b), (n.b, n.a)):
+                    if y in andn_fanout1 and graph.nodes[y].op == OP_NOT:
+                        remap[nid] = g2.ANDN(remap[x],
+                                             remap[graph.nodes[y].a])
+                        done = True
+                        break
+            if not done:
+                remap[nid] = g2.AND(remap[n.a], remap[n.b])
+        elif n.op == OP_OR:
+            remap[nid] = g2.OR(remap[n.a], remap[n.b])
+        elif n.op == OP_XOR:
+            remap[nid] = g2.XOR(remap[n.a], remap[n.b])
+        elif n.op == OP_ANDN:
+            remap[nid] = g2.ANDN(remap[n.a], remap[n.b])
+        elif n.op == OP_MUX:
+            remap[nid] = g2.MUX(remap[n.a], remap[n.b], remap[n.c])
+        elif n.op == OP_LUT3:
+            remap[nid] = _lut3_fold(
+                g2, n.aux, [remap[n.a], remap[n.b], remap[n.c]])
+        else:  # pragma: no cover
+            raise ValueError(n.op)
+    for name, bus in graph.inputs.items():
+        if name not in g2.inputs:
+            g2.input_bus(name, len(bus))
+    for name, bus in graph.outputs.items():
+        g2.output_bus(name, [remap[w] for w in bus])
+    return g2
+
+
+def const_prop(graph: Graph) -> Graph:
+    """Propagate constants / local identities through every gate (also
+    sweeps dead nodes; LUT3 cells with degenerate inputs shrink)."""
+    return _rebuild(graph)
+
+
+def sweep(graph: Graph) -> Graph:
+    """Drop nodes not reachable from any output (dead-node sweep).
+
+    Structure-preserving: live nodes are copied verbatim (no folding —
+    use :func:`const_prop` for that), so mapped cell choices survive."""
+    g2 = Graph()
+    remap: dict[int, int] = {FALSE: FALSE, TRUE: TRUE}
+    for nid in graph.topo_order():
+        n = graph.nodes[nid]
+        if nid in (FALSE, TRUE):
+            continue
+        if n.op == OP_INPUT:
+            name, _ = n.aux
+            if name not in g2.inputs:
+                g2.input_bus(name, len(graph.inputs[name]))
+            remap[nid] = g2.inputs[name][n.aux[1]]
+        elif n.op == OP_CONST:
+            remap[nid] = TRUE if n.aux else FALSE
+        else:
+            remap[nid] = g2._new(
+                n.op, remap.get(n.a, -1) if n.a >= 0 else -1,
+                remap.get(n.b, -1) if n.b >= 0 else -1,
+                remap.get(n.c, -1) if n.c >= 0 else -1, n.aux)
+    for name, bus in graph.inputs.items():
+        if name not in g2.inputs:
+            g2.input_bus(name, len(bus))
+    for name, bus in graph.outputs.items():
+        g2.output_bus(name, [remap[w] for w in bus])
+    return g2
+
+
+def absorb_andn(graph: Graph) -> Graph:
+    """Fuse AND(a, NOT b) -> ANDN(a, b) wherever the NOT has no other
+    fanout.  Only valid for libraries with an ANDN cell (avx2/avx512)."""
+    fanout: dict[int, int] = {}
+    live = graph.topo_order()
+    for nid in live:
+        n = graph.nodes[nid]
+        for ch in (n.a, n.b, n.c):
+            if ch >= 0:
+                fanout[ch] = fanout.get(ch, 0) + 1
+    singles = {nid for nid in live
+               if graph.nodes[nid].op == OP_NOT and fanout.get(nid, 0) == 1}
+    return _rebuild(graph, andn_fanout1=singles)
+
+
+def lib_gate_count(graph: Graph, lib_name: str) -> int:
+    """Mapped instruction count, with the neon OR(a, NOT b) == ORN fusion
+    accounted (the histogram the paper reports)."""
+    count = graph.live_gate_count()
+    if lib_name == "neon":
+        count -= _count_orn(graph)
+    return count
+
+
+def optimize_mapped(graph: Graph, lib_name: str, iters: int = 2) -> Graph:
+    """Tech-map + post-mapping clean-up pipeline.
+
+    Runs the priority-cuts mapper, constant propagation / dead-node
+    sweep, then up to ``iters - 1`` additional area-flow remap
+    iterations (each candidate kept only if it lowers the mapped
+    instruction count), and finally ANDN absorption for libraries that
+    have the cell.  Semantics-preserving; tests re-verify outputs."""
+    lib = CELL_LIBS[lib_name]()
+    best = const_prop(tech_map(graph, lib))
+    for _ in range(max(0, iters - 1)):
+        cand = const_prop(tech_map(best, lib))
+        if lib_gate_count(cand, lib_name) < lib_gate_count(best, lib_name):
+            best = cand
+        else:
+            break
+    if lib.supports(2, 0b0010) is not None:   # library has an ANDN cell
+        cand = absorb_andn(best)
+        if lib_gate_count(cand, lib_name) <= lib_gate_count(best, lib_name):
+            best = cand
+    return best
+
+
+def gate_report(graph: Graph, libs=None, optimize: bool = True) -> dict:
+    """Per-library gate-count report: {lib: {gates, depth, histogram}}.
+
+    ``gates`` is the mapped instruction count after the optimization
+    pipeline (or after plain tech mapping when ``optimize=False``)."""
+    report = {}
+    for lib_name in (libs or CELL_LIBS):
+        st = mapped_stats(graph, lib_name, optimize=optimize)
+        report[lib_name] = {k: st[k] for k in ("gates", "depth", "histogram")}
+    return report
+
+
+# ---------------------------------------------------------------------------
 # Reporting
 # ---------------------------------------------------------------------------
-def mapped_stats(graph: Graph, lib_name: str) -> dict:
+def mapped_stats(graph: Graph, lib_name: str, optimize: bool = False) -> dict:
     """Map `graph` for `lib_name`, return {gates, depth, histogram}."""
-    lib = CELL_LIBS[lib_name]()
-    mapped = tech_map(graph, lib)
+    if optimize:
+        mapped = optimize_mapped(graph, lib_name)
+    else:
+        mapped = tech_map(graph, CELL_LIBS[lib_name]())
     hist = mapped.op_histogram()
     if lib_name == "neon":
         # OR(a, NOT b) pairs emitted for ORN count as a single instruction

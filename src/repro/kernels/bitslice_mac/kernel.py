@@ -12,6 +12,11 @@ TPU adaptation of the paper's CNN convolution (Fig. 5):
 * The reduction over input channels C runs as the innermost *grid*
   dimension with output-block revisiting, so the OFM accumulator planes
   stay resident in VMEM while C streams through (HBM->VMEM once).
+* Channels advance ``c_unroll`` at a time through a fused K-step MAC
+  chain netlist (``build_mac_chain``): the per-step canonical
+  pack/unpack is elided inside the chain and the ``fori_loop`` trip
+  count drops by ``c_unroll`` — fewer gates *and* fewer loop steps per
+  accumulated channel (DESIGN.md §3, §5).
 
 Layouts:
     i_masks : [P, C, NIN]  int32, each element 0 or -1 (bit broadcast)
@@ -28,21 +33,38 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.codegen import make_jax_fn
-from repro.core.fpcore import build_mac
+from repro.core.fpcore import build_mac_chain
 from repro.core.fpformat import RNE, FPFormat
-from repro.core.opt import CELL_LIBS, tech_map
+from repro.core.opt import optimize_mapped
 
 
 @functools.lru_cache(maxsize=None)
-def mac_netlist_fn(fmt: FPFormat, extended: bool, rounding: str):
-    """TPU-mapped MAC netlist as a traceable planes->planes function."""
-    g = build_mac(fmt, extended, rounding)
-    mapped = tech_map(g, CELL_LIBS["tpu_vpu"]())
+def mac_chain_netlist_fn(fmt: FPFormat, k: int, extended: bool,
+                         rounding: str, lib: str = "tpu_vpu"):
+    """Optimized ``lib``-mapped K-step MAC chain as a traceable fn.
+
+    The chain is bit-exact to ``k`` sequential MAC steps; the mapped
+    netlist additionally goes through the post-mapping optimization
+    passes (constant propagation, remap iteration, dead-node sweep)."""
+    g = build_mac_chain(fmt, k, extended, rounding)
+    mapped = optimize_mapped(g, lib)
     return make_jax_fn(mapped), mapped
 
 
-def _mac_kernel(i_ref, w_ref, o_ref, *, c_block: int, nin: int, nout: int,
-                fmt: FPFormat, extended: bool, rounding: str):
+def _chain_kwargs(xw, yb, c_unroll: int):
+    """Per-step chain operands from [c_unroll, NIN, Mt] weight planes and
+    [P_blk, c_unroll, NIN] ifm masks, shaped to broadcast to
+    [NIN, P_blk, Mt] inside the netlist."""
+    kwargs = {}
+    for j in range(c_unroll):
+        kwargs[f"x{j}"] = xw[j][:, None, :]                       # [NIN,1,Mt]
+        kwargs[f"y{j}"] = jnp.transpose(yb[:, j, :], (1, 0))[:, :, None]
+    return kwargs                                                 # [NIN,P,1]
+
+
+def _mac_kernel(i_ref, w_ref, o_ref, *, c_block: int, c_unroll: int,
+                nin: int, nout: int, fmt: FPFormat, extended: bool,
+                rounding: str):
     ci = pl.program_id(2)
 
     @pl.when(ci == 0)
@@ -50,31 +72,38 @@ def _mac_kernel(i_ref, w_ref, o_ref, *, c_block: int, nin: int, nout: int,
         # +0.0 in FloPoCo encoding is the all-zero code word.
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    fn, _ = mac_netlist_fn(fmt, extended, rounding)
-    acc_shape = o_ref.shape[1:]  # [P_blk, Mt]
+    fn, _ = mac_chain_netlist_fn(fmt, c_unroll, extended, rounding)
+    acc_shape = o_ref.shape          # (NOUT, P_blk, Mt): explicit carry shape
+    assert acc_shape[0] == nout, (acc_shape, nout)
+    assert c_block % c_unroll == 0, (c_block, c_unroll)
 
-    def step(c, acc):
-        xw = w_ref[c]                       # [NIN, Mt] weight planes
-        yb = i_ref[:, c, :]                 # [P_blk, NIN] ifm masks
-        x = xw[:, None, :]                  # [NIN, 1, Mt]
-        y = jnp.transpose(yb, (1, 0))[:, :, None]   # [NIN, P_blk, 1]
-        out = fn(x=x, y=y, acc=acc)["out"]
-        return jnp.broadcast_to(out, (nout,) + acc_shape)
+    def step(s, acc):
+        base = s * c_unroll
+        xw = w_ref[pl.ds(base, c_unroll)]        # [c_unroll, NIN, Mt]
+        yb = i_ref[:, pl.ds(base, c_unroll), :]  # [P_blk, c_unroll, NIN]
+        out = fn(acc=acc, **_chain_kwargs(xw, yb, c_unroll))["out"]
+        # Every output plane depends on the acc input, but planes that
+        # collapse to a constant/broadcast still need the explicit
+        # expansion for the fori_loop carry to keep a fixed shape.
+        assert out.shape[0] == nout, (out.shape, nout)
+        return jnp.broadcast_to(out, acc_shape)
 
-    acc = jax.lax.fori_loop(0, c_block, step, o_ref[...])
+    acc = jax.lax.fori_loop(0, c_block // c_unroll, step, o_ref[...])
     o_ref[...] = acc
 
 
 def bitslice_mac_pallas(i_masks, w_planes, *, fmt: FPFormat,
                         extended: bool = False, rounding: str = RNE,
                         p_block: int = 8, m_block: int = 128,
-                        c_block: int = 64, interpret: bool = False):
+                        c_block: int = 64, c_unroll: int = 4,
+                        interpret: bool = False):
     """Launch the bitslice MAC kernel.
 
     i_masks: [P, C, NIN] int32 in {0, -1}; w_planes: [C, NIN, Mw] int32.
     Returns OFM planes [NOUT, P, Mw] int32.  P % p_block == 0,
     Mw % m_block == 0, C % c_block == 0 (pad with +0 codes upstream —
-    zero-padding is the identity for the HOBFLOPS MAC).
+    zero-padding is the identity for the HOBFLOPS MAC), and
+    c_block % c_unroll == 0 (clamped down when it does not divide).
     """
     P, C, nin = i_masks.shape
     C2, nin2, Mw = w_planes.shape
@@ -85,10 +114,14 @@ def bitslice_mac_pallas(i_masks, w_planes, *, fmt: FPFormat,
     m_block = min(m_block, Mw)
     c_block = min(c_block, C)
     assert P % p_block == 0 and Mw % m_block == 0 and C % c_block == 0
+    c_unroll = max(1, min(c_unroll, c_block))
+    while c_block % c_unroll:
+        c_unroll -= 1
 
     grid = (P // p_block, Mw // m_block, C // c_block)
-    kernel = functools.partial(_mac_kernel, c_block=c_block, nin=nin,
-                               nout=nout, fmt=fmt, extended=extended,
+    kernel = functools.partial(_mac_kernel, c_block=c_block,
+                               c_unroll=c_unroll, nin=nin, nout=nout,
+                               fmt=fmt, extended=extended,
                                rounding=rounding)
     return pl.pallas_call(
         kernel,

@@ -22,7 +22,7 @@ from repro.core import softfloat as sf
 from repro.core.bitslice import pack_planes, unpack_planes
 from repro.core.fpformat import RNE, FPFormat
 
-from .kernel import bitslice_mac_pallas, mac_netlist_fn
+from .kernel import bitslice_mac_pallas, mac_chain_netlist_fn
 
 LANE = 32
 
@@ -53,11 +53,12 @@ def encode_inputs(i_f32, w_f32, fmt: FPFormat, rounding: str = RNE,
 
 @functools.partial(jax.jit, static_argnames=(
     "fmt", "extended", "rounding", "backend", "interpret",
-    "p_block", "m_block", "c_block"))
+    "p_block", "m_block", "c_block", "c_unroll"))
 def hobflops_matmul(i_f32, w_f32, *, fmt: FPFormat, extended: bool = False,
                     rounding: str = RNE, backend: str = "pallas",
                     interpret: bool = False, p_block: int = 8,
-                    m_block: int = 128, c_block: int = 64):
+                    m_block: int = 128, c_block: int = 64,
+                    c_unroll: int = 4):
     """GEMM [P,C] @ [C,M] -> [P,M] float32, in HOBFLOPS arithmetic."""
     P, C = i_f32.shape
     C2, M = w_f32.shape
@@ -68,10 +69,11 @@ def hobflops_matmul(i_f32, w_f32, *, fmt: FPFormat, extended: bool = False,
         out = bitslice_mac_pallas(
             i_masks, w_planes, fmt=fmt, extended=extended,
             rounding=rounding, p_block=p_block, m_block=m_block,
-            c_block=c_block, interpret=interpret)
+            c_block=c_block, c_unroll=c_unroll, interpret=interpret)
     elif backend == "jnp":
         out = _bitslice_mac_jnp(i_masks, w_planes, fmt=fmt,
-                                extended=extended, rounding=rounding)
+                                extended=extended, rounding=rounding,
+                                c_unroll=c_unroll)
     else:
         raise ValueError(backend)
     fmt_out = fmt.mult_out(extended)
@@ -81,21 +83,31 @@ def hobflops_matmul(i_f32, w_f32, *, fmt: FPFormat, extended: bool = False,
 
 
 def _bitslice_mac_jnp(i_masks, w_planes, *, fmt: FPFormat, extended: bool,
-                      rounding: str):
-    """Netlist over full arrays with a scan over C (pure XLA path)."""
-    fn, _ = mac_netlist_fn(fmt, extended, rounding)
+                      rounding: str, c_unroll: int = 4):
+    """Chain netlist over full arrays with a scan over C/c_unroll steps
+    (pure XLA path).  C is padded to a multiple of ``c_unroll`` with +0
+    codes — the all-zero planes — which are the MAC identity."""
     P, C, nin = i_masks.shape
     _, _, Mw = w_planes.shape
     nout = fmt.mult_out(extended).nbits
+    ku = max(1, min(c_unroll, C))
+    pad = (-C) % ku
+    if pad:
+        i_masks = jnp.pad(i_masks, ((0, 0), (0, pad), (0, 0)))
+        w_planes = jnp.pad(w_planes, ((0, pad), (0, 0), (0, 0)))
+        C += pad
+    fn, _ = mac_chain_netlist_fn(fmt, ku, extended, rounding)
     acc0 = jnp.zeros((nout, P, Mw), jnp.int32)
-    xs = (jnp.moveaxis(i_masks, 1, 0),              # [C, P, NIN]
-          w_planes)                                 # [C, NIN, Mw]
+    xs = (jnp.moveaxis(i_masks, 1, 0).reshape(C // ku, ku, P, nin),
+          w_planes.reshape(C // ku, ku, nin, Mw))
 
     def step(acc, xw):
-        ib, wp = xw                                  # [P,NIN], [NIN,Mw]
-        x = wp[:, None, :]                           # [NIN, 1, Mw]
-        y = jnp.transpose(ib, (1, 0))[:, :, None]    # [NIN, P, 1]
-        out = fn(x=x, y=y, acc=acc)["out"]
+        ib, wp = xw                        # [ku, P, NIN], [ku, NIN, Mw]
+        kwargs = {}
+        for j in range(ku):
+            kwargs[f"x{j}"] = wp[j][:, None, :]                 # [NIN,1,Mw]
+            kwargs[f"y{j}"] = jnp.transpose(ib[j], (1, 0))[:, :, None]
+        out = fn(acc=acc, **kwargs)["out"]
         return jnp.broadcast_to(out, acc.shape), None
 
     acc, _ = jax.lax.scan(step, acc0, xs)

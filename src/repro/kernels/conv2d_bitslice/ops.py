@@ -12,13 +12,14 @@ paper §3.4.
 from __future__ import annotations
 
 import functools
+import time
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.fpformat import RNE, FPFormat
 from repro.kernels.bitslice_mac.kernel import bitslice_mac_pallas
-from repro.kernels.bitslice_mac.ops import (_bitslice_mac_jnp,
+from repro.kernels.bitslice_mac.ops import (LANE, _bitslice_mac_jnp,
                                             encode_inputs)
 
 
@@ -53,16 +54,49 @@ def hobflops_relu_planes(planes, fmt: FPFormat):
     return planes & keep[None]
 
 
+def derive_blocks(P: int, K: int, M: int, *, p_block: int | None = None,
+                  m_block: int | None = None, c_block: int | None = None,
+                  c_unroll: int | None = None) -> dict:
+    """Launch parameters for a [P, K] @ [K, M] bitslice GEMM.
+
+    Defaults follow the TPU vreg geometry: 8 sublanes of output pixels
+    per tile (``p_block``), up to 128 int32 lane words of kernels
+    (``m_block`` — *not* 1, and never padding M past the next lane-word
+    multiple), the full reduction in VMEM when it fits (``c_block``) and
+    4 chained channels per netlist call (``c_unroll``).  Every value is
+    clamped to the problem size; explicit arguments win (the autotune
+    sweep passes candidates through here).  See DESIGN.md §5.
+    """
+    m_words = -(-M // LANE)
+    blocks = {
+        "p_block": min(p_block or 8, P),
+        "m_block": min(m_block or 128, m_words),
+        "c_block": min(c_block or 64, K),
+        "c_unroll": c_unroll or 4,
+    }
+    blocks["c_unroll"] = max(1, min(blocks["c_unroll"], blocks["c_block"]))
+    while blocks["c_block"] % blocks["c_unroll"]:
+        blocks["c_unroll"] -= 1
+    return blocks
+
+
 @functools.partial(jax.jit, static_argnames=(
     "fmt", "kh", "kw", "stride", "padding", "extended", "rounding",
-    "relu", "backend", "interpret"))
+    "relu", "backend", "interpret", "p_block", "m_block", "c_block",
+    "c_unroll"))
 def hobflops_conv2d(images, kernels, *, fmt: FPFormat, stride: int = 1,
                     padding: str = "SAME", extended: bool = False,
                     rounding: str = RNE, relu: bool = False,
                     backend: str = "jnp", interpret: bool = False,
-                    kh: int | None = None, kw: int | None = None):
+                    kh: int | None = None, kw: int | None = None,
+                    p_block: int | None = None, m_block: int | None = None,
+                    c_block: int | None = None, c_unroll: int | None = None):
     """images [B,H,W,C] f32, kernels [kh,kw,C,M] f32 -> [B,Ho,Wo,M] f32
-    computed entirely in HOBFLOPS bitslice arithmetic."""
+    computed entirely in HOBFLOPS bitslice arithmetic.
+
+    Block sizes / ``c_unroll`` default to shape-derived values
+    (:func:`derive_blocks`) and are exposed for autotuning
+    (:func:`tune_conv_blocks`)."""
     khh, kww, C, M = kernels.shape
     patches = im2col(images, khh, kww, stride, padding)
     B, Ho, Wo, K = patches.shape
@@ -71,19 +105,73 @@ def hobflops_conv2d(images, kernels, *, fmt: FPFormat, stride: int = 1,
 
     from repro.core import softfloat as sf
     from repro.core.bitslice import unpack_planes
-    i_masks, w_planes = encode_inputs(pf, wf, fmt, rounding)
+    blk = derive_blocks(B * Ho * Wo, K, M, p_block=p_block,
+                        m_block=m_block, c_block=c_block,
+                        c_unroll=c_unroll)
+    i_masks, w_planes = encode_inputs(
+        pf, wf, fmt, rounding, p_block=blk["p_block"],
+        m_block=blk["m_block"], c_block=blk["c_block"])
     if backend == "pallas":
         out = bitslice_mac_pallas(i_masks, w_planes, fmt=fmt,
                                   extended=extended, rounding=rounding,
-                                  p_block=min(8, i_masks.shape[0]),
-                                  m_block=1, c_block=min(64, K),
-                                  interpret=interpret)
+                                  interpret=interpret, **blk)
     else:
         out = _bitslice_mac_jnp(i_masks, w_planes, fmt=fmt,
-                                extended=extended, rounding=rounding)
+                                extended=extended, rounding=rounding,
+                                c_unroll=blk["c_unroll"])
     fmt_out = fmt.mult_out(extended)
     if relu:
         out = hobflops_relu_planes(out, fmt_out)
     codes = unpack_planes(out)
     vals = sf.decode_jnp(codes, fmt_out)
     return vals[:B * Ho * Wo, :M].reshape(B, Ho, Wo, M)
+
+
+def tune_conv_blocks(images, kernels, *, fmt: FPFormat,
+                     backend: str = "jnp", interpret: bool = False,
+                     candidates=None, iters: int = 2, **conv_kw):
+    """Small sweep helper: time ``hobflops_conv2d`` over block-size /
+    ``c_unroll`` candidates and return ``(best_blocks, results)``.
+
+    ``candidates`` is an iterable of dicts with any of
+    ``p_block/m_block/c_block/c_unroll`` set (missing keys fall back to
+    the derived defaults); by default a c_unroll x m_block cross sweep.
+    ``results`` maps the *resolved* (post-clamp) parameter tuple to
+    seconds/call — candidates that clamp to the same launch config are
+    timed once.  Raises if every candidate fails to launch.
+    """
+    if candidates is None:
+        candidates = [{"c_unroll": u, "m_block": m}
+                      for u in (1, 2, 4, 8) for m in (8, 32, 128)]
+    khh, kww, C, M = kernels.shape
+    B, H, W, _ = images.shape
+    results: dict[tuple, float] = {}
+    best, best_dt = None, float("inf")
+    last_err = None
+    for cand in candidates:
+        # Resolve through the same clamping the launch will apply so
+        # equivalent candidates dedupe (P is conservatively the
+        # unstrided patch count; exact P only shifts p_block clamping).
+        key = tuple(sorted(derive_blocks(B * H * W, khh * kww * C, M,
+                                         **cand).items()))
+        if key in results:
+            continue
+        run = lambda: jax.block_until_ready(hobflops_conv2d(
+            images, kernels, fmt=fmt, backend=backend,
+            interpret=interpret, **cand, **conv_kw))
+        try:
+            run()                                   # compile + warm
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                run()
+            dt = (time.perf_counter() - t0) / iters
+        except Exception as e:                      # unlaunchable combo
+            last_err = e
+            continue
+        results[key] = dt
+        if dt < best_dt:
+            best, best_dt = dict(cand), dt
+    if best is None:
+        raise RuntimeError(
+            f"tune_conv_blocks: no candidate launched") from last_err
+    return best, results

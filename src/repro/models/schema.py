@@ -106,6 +106,11 @@ class Rules:
                 continue
             total = math.prod(self.sizes[a] for a in group)
             if dim % total == 0:
+                # normalize 1-tuples to the bare axis name so specs
+                # compare equal regardless of how the rule was written
+                if (not isinstance(mesh_axes, str)
+                        and len(tuple(mesh_axes)) == 1):
+                    return tuple(mesh_axes)[0]
                 return mesh_axes
         return None  # replicate rather than emit invalid sharding
 

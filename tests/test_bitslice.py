@@ -1,6 +1,9 @@
 """Bit-plane transform properties (hypothesis) and codegen equivalence."""
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

@@ -8,9 +8,12 @@ from repro.core import softfloat as sf
 from repro.core.bitslice import pack_planes_np, unpack_planes_np
 from repro.core.circuit import Graph
 from repro.core.codegen import eval_netlist
-from repro.core.fpcore import build_add, build_mac, build_mul
+from repro.core.fpcore import (build_add, build_mac, build_mac_chain,
+                               build_mul)
 from repro.core.fpformat import RNE, RTZ, FPFormat
-from repro.core.opt import CELL_LIBS, tech_map
+from repro.core.opt import (CELL_LIBS, absorb_andn, const_prop,
+                            lib_gate_count, optimize_mapped, sweep,
+                            tech_map)
 
 from test_softfloat import canonical_codes
 
@@ -104,6 +107,166 @@ def test_gate_count_monotone_in_precision():
     g12 = build_mac(FPFormat(5, 6)).live_gate_count()
     g16 = build_mac(FPFormat(5, 10)).live_gate_count()
     assert g8 < g12 < g16
+
+
+# ---------------------------------------------------------------------------
+# Fused K-step MAC chain
+# ---------------------------------------------------------------------------
+def _mac_sequential(fmt, xs, ys, acc, extended=False, rounding=RNE):
+    """k sequential build_mac netlist applications (the chain oracle)."""
+    fmt_out = fmt.mult_out(extended)
+    g = build_mac(fmt, extended, rounding)
+    cur = acc
+    for x, y in zip(xs, ys):
+        cur = run_netlist(g, {"x": x, "y": y, "acc": cur},
+                          {"x": fmt.nbits, "y": fmt.nbits,
+                           "acc": fmt_out.nbits})
+    return cur
+
+
+def _run_chain(fmt, k, xs, ys, acc, extended=False, rounding=RNE):
+    fmt_out = fmt.mult_out(extended)
+    g = build_mac_chain(fmt, k, extended, rounding)
+    codes = {f"x{i}": xs[i] for i in range(k)}
+    codes |= {f"y{i}": ys[i] for i in range(k)}
+    codes["acc"] = acc
+    widths = {n: fmt.nbits for n in codes}
+    widths["acc"] = fmt_out.nbits
+    return run_netlist(g, codes, widths)
+
+
+def test_mac_chain_exhaustive_small():
+    """k=2 chain == 2 sequential MACs over EVERY canonical operand
+    combination of the smallest legal format (e2m1)."""
+    fmt = FPFormat(2, 1)
+    fmt_out = fmt.mult_out()
+    cs = canonical_codes(fmt)          # 21 codes
+    co = canonical_codes(fmt_out)
+    grids = np.meshgrid(cs, cs, cs, cs, co, indexing="ij")
+    x0, y0, x1, y1, acc = (a.ravel() for a in grids)
+    want = _mac_sequential(fmt, [x0, x1], [y0, y1], acc)
+    got = _run_chain(fmt, 2, [x0, x1], [y0, y1], acc)
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("fmt,k,extended,rounding", [
+    (FPFormat(3, 2), 2, False, RNE),
+    (FPFormat(3, 2), 3, False, RTZ),
+    (FPFormat(3, 2), 2, True, RNE),
+    (FPFormat(5, 2), 4, False, RNE),   # hobflops8
+    (FPFormat(5, 3), 4, False, RNE),   # hobflops9
+])
+def test_mac_chain_matches_sequential(fmt, k, extended, rounding):
+    fmt_out = fmt.mult_out(extended)
+    rng = np.random.default_rng(fmt.w_e * 100 + fmt.w_f * 10 + k)
+    n = 8192
+    cc, co = canonical_codes(fmt), canonical_codes(fmt_out)
+    xs = [cc[rng.integers(0, len(cc), n)] for _ in range(k)]
+    ys = [cc[rng.integers(0, len(cc), n)] for _ in range(k)]
+    acc = co[rng.integers(0, len(co), n)]
+    want = _mac_sequential(fmt, xs, ys, acc, extended, rounding)
+    got = _run_chain(fmt, k, xs, ys, acc, extended, rounding)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_mac_chain_fewer_raw_gates():
+    for fmt in (FPFormat(5, 2), FPFormat(5, 3), FPFormat(5, 10)):
+        k = 4
+        chain = build_mac_chain(fmt, k).live_gate_count()
+        single = build_mac(fmt).live_gate_count()
+        assert chain < k * single, (fmt, chain, k * single)
+
+
+@pytest.mark.parametrize("lib", ["tpu_vpu", "avx2", "neon", "avx512"])
+def test_mac_chain_fewer_mapped_gates(lib):
+    """The acceptance metric: optimized mapped chain beats k x single
+    MAC for the paper's formats under every cell library."""
+    for fmt in (FPFormat(5, 2), FPFormat(5, 3)):   # hobflops8 / hobflops9
+        k = 4
+        chain = lib_gate_count(optimize_mapped(build_mac_chain(fmt, k), lib),
+                               lib)
+        single = lib_gate_count(optimize_mapped(build_mac(fmt), lib), lib)
+        assert chain < k * single, (lib, fmt, chain, k * single)
+
+
+# ---------------------------------------------------------------------------
+# Netlist optimization passes
+# ---------------------------------------------------------------------------
+def _mul_vectors(fmt):
+    xs = canonical_codes(fmt)
+    return np.repeat(xs, len(xs)), np.tile(xs, len(xs))
+
+
+@pytest.mark.parametrize("lib", ["tpu_vpu", "avx2", "neon", "avx512"])
+def test_optimize_mapped_preserves_semantics(lib):
+    """Full pipeline (map + const-prop + remap + absorb) is semantics-
+    preserving, exhaustively, for every cell library."""
+    fmt = FPFormat(3, 2)
+    g = build_mul(fmt, fmt.mult_out(), RNE)
+    X, Y = _mul_vectors(fmt)
+    want = run_netlist(g, {"x": X, "y": Y},
+                       {"x": fmt.nbits, "y": fmt.nbits})
+    opt = optimize_mapped(g, lib)
+    got = run_netlist(opt, {"x": X, "y": Y},
+                      {"x": fmt.nbits, "y": fmt.nbits})
+    np.testing.assert_array_equal(got, want)
+    assert (lib_gate_count(opt, lib)
+            <= lib_gate_count(tech_map(g, CELL_LIBS[lib]()), lib))
+
+
+@pytest.mark.parametrize("passes", [
+    (const_prop,), (sweep,), (absorb_andn,),
+    (const_prop, absorb_andn, sweep),
+])
+@pytest.mark.parametrize("lib", ["avx2", "avx512"])
+def test_individual_passes_preserve_semantics(passes, lib):
+    fmt = FPFormat(3, 2)
+    g = tech_map(build_mul(fmt, fmt.mult_out(), RNE), CELL_LIBS[lib]())
+    X, Y = _mul_vectors(fmt)
+    want = run_netlist(g, {"x": X, "y": Y},
+                       {"x": fmt.nbits, "y": fmt.nbits})
+    for p in passes:
+        g = p(g)
+    got = run_netlist(g, {"x": X, "y": Y},
+                      {"x": fmt.nbits, "y": fmt.nbits})
+    np.testing.assert_array_equal(got, want)
+
+
+def test_const_prop_folds_constants():
+    g = Graph()
+    a = g.input_bus("a", 2)
+    # dead logic + constant-feedable LUT3
+    g.LUT3(0b10010110, a[0], a[1], 0)      # xor3 with c=0 -> a0 ^ a1
+    out = g.LUT3(0b11101000, a[0], a[1], 1)  # majority with c=1 -> a0 | a1
+    g.output_bus("out", [out])
+    opt = const_prop(g)
+    vals = eval_netlist(opt, {"a": np.array(
+        [[0, 1, 0, 1], [0, 0, 1, 1]], dtype=np.uint64)})["out"][0]
+    np.testing.assert_array_equal(vals, [0, 1, 1, 1])
+    from repro.core.circuit import OP_LUT3
+    assert all(n.op != OP_LUT3 for n in opt.nodes)
+
+
+def test_absorb_andn_fuses_single_fanout_not():
+    g = Graph()
+    a = g.input_bus("a", 1)[0]
+    b = g.input_bus("b", 1)[0]
+    g.output_bus("out", [g.AND(a, g.NOT(b))])
+    fused = absorb_andn(g)
+    assert fused.live_gate_count() == 1
+    vals = eval_netlist(fused, {
+        "a": np.array([[0, 0, 1, 1]], dtype=np.uint64),
+        "b": np.array([[0, 1, 0, 1]], dtype=np.uint64)})["out"][0]
+    np.testing.assert_array_equal(vals, [0, 0, 1, 0])
+
+
+def test_sweep_drops_dead_nodes():
+    g = Graph()
+    a = g.input_bus("a", 2)
+    keep = g.XOR(a[0], a[1])
+    g.AND(a[0], a[1])          # dead
+    g.output_bus("out", [keep])
+    assert len(sweep(g).nodes) < len(g.nodes)
 
 
 def test_hash_consing_shares_structure():

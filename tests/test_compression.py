@@ -46,15 +46,17 @@ def test_error_feedback_accumulates_to_truth():
 
 
 def test_compressed_psum_shard_map():
-    mesh = jax.make_mesh(
-        (1,), ("data",),
-        axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import _mk
+    mesh = _mk((1,), ("data",))
     x = jnp.arange(8, dtype=jnp.float32) / 7.0
 
     def f(x):
         return compressed_psum(x, "data")
 
-    y = jax.shard_map(f, mesh=mesh, in_specs=P(), out_specs=P())(x)
+    shard_map = getattr(jax, "shard_map", None)
+    if shard_map is None:  # older jax keeps it in experimental
+        from jax.experimental.shard_map import shard_map
+    y = shard_map(f, mesh=mesh, in_specs=P(), out_specs=P())(x)
     np.testing.assert_allclose(np.asarray(y), np.asarray(x), atol=0.01)
 
 

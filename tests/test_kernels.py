@@ -126,6 +126,49 @@ def test_hobflops_conv2d(relu):
     np.testing.assert_array_equal(got, want)
 
 
+def test_bitslice_mac_c_unroll_chain():
+    """Chained-channel kernel (c_unroll > 1) stays bit-exact, including
+    when c_unroll does not divide C (clamping / padding paths)."""
+    fmt = FPFormat(5, 3)
+    rng = np.random.default_rng(7)
+    P, C, M = 8, 12, 64
+    i, w = _rand(rng, (P, C)), _rand(rng, (C, M))
+    want = hobflops_matmul_f64(i, w, fmt)
+    for c_unroll in (1, 2, 4, 5):
+        got_j = np.asarray(hobflops_matmul(
+            i, w, fmt=fmt, backend="jnp", c_unroll=c_unroll))
+        np.testing.assert_array_equal(got_j, want)
+    got_p = np.asarray(hobflops_matmul(
+        i, w, fmt=fmt, backend="pallas", interpret=True, p_block=4,
+        m_block=2, c_block=4, c_unroll=4))
+    np.testing.assert_array_equal(got_p, want)
+
+
+def test_hobflops_conv2d_pallas_tiled():
+    """Acceptance: the Pallas path with real tiling (M > 32 so the M
+    grid axis is exercised with m_block > 1, C > c_unroll so the chain
+    loop runs multiple steps) is bit-exact vs the jnp reference."""
+    fmt = FPFormat(5, 2)
+    rng = np.random.default_rng(11)
+    img = _rand(rng, (1, 6, 6, 5))
+    ker = _rand(rng, (3, 3, 5, 48), 0.4)   # K = 45 > c_unroll, M = 48 > 32
+    want = np.asarray(hobflops_conv2d(img, ker, fmt=fmt, backend="jnp"))
+    got = np.asarray(hobflops_conv2d(img, ker, fmt=fmt, backend="pallas",
+                                     interpret=True))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_derive_blocks():
+    from repro.kernels.conv2d_bitslice.ops import derive_blocks
+    blk = derive_blocks(36, 45, 48)
+    assert blk["p_block"] == 8 and blk["m_block"] == 2
+    assert blk["c_block"] == 45 and blk["c_block"] % blk["c_unroll"] == 0
+    # explicit overrides win but are still clamped to the problem
+    blk = derive_blocks(4, 8, 32, p_block=16, m_block=4, c_unroll=3)
+    assert blk["p_block"] == 4 and blk["m_block"] == 1
+    assert blk["c_block"] % blk["c_unroll"] == 0
+
+
 def test_hobflops_relu_is_bitwise():
     """ReLU in the bitslice domain == ReLU on decoded values."""
     import jax.numpy as jnp

@@ -1,0 +1,43 @@
+"""Tier-1 wiring for the dev tooling: the exhaustive circuit check
+script and the machine-readable benchmark emission."""
+import json
+import os
+import sys
+
+import pytest
+
+_ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), os.pardir)
+sys.path.insert(0, os.path.join(_ROOT, "scripts"))
+
+
+def test_dev_check_circuits_quick():
+    """scripts/dev_check_circuits.py --quick is part of the tier-1 flow."""
+    import dev_check_circuits
+    assert dev_check_circuits.run_checks(quick=True)
+
+
+def test_bench_json_writer(tmp_path):
+    """run.py's JSON emission produces the BENCH_<section>.json layout
+    future PRs read for the perf trajectory."""
+    sys.path.insert(0, _ROOT)
+    from benchmarks.run import _write_json
+    results = {"formats": {"hobflops9": {"rne": {
+        "seed_macs_per_s": 1.0, "chain4_macs_per_s": 1.6,
+        "speedup_vs_seed": 1.6}}}}
+    path = _write_json(str(tmp_path), "macs", results)
+    assert os.path.basename(path) == "BENCH_macs.json"
+    with open(path) as f:
+        assert json.load(f) == results
+
+
+def test_gates_chain_table_shape():
+    """chain_table reports gates/MAC per lib with the fields the
+    acceptance trajectory tracks."""
+    sys.path.insert(0, _ROOT)
+    from benchmarks.gates import LIBS, chain_table
+    rows = chain_table(["hobflops8"], k=2)
+    (row,) = rows
+    for lib in LIBS:
+        cell = row[lib]
+        assert cell["chain_gates_per_mac"] < cell["mac_gates"]
+        assert cell["saving_pct"] > 0
