@@ -1,0 +1,151 @@
+"""Multi-layer pipeline benchmark: bitslice-resident vs per-layer
+decode/re-encode (paper §3.4's "data stays in HOBFLOPS format between
+layers", DESIGN.md §8).
+
+Workload: a MobileNets-style pointwise stack (the paper's Fig. 5 layer,
+depth-chained; channel width scaled for CPU wall-clock like
+``conv_layer.py``).  Three contenders over identical arithmetic:
+
+* ``resident``     — :class:`HobflopsNetwork`: one activation encode,
+                     one decode, bitwise format casts + plane-domain
+                     im2col at every interior boundary; weights
+                     pre-encoded once.
+* ``roundtrip``    — the pre-PR per-layer path: chained
+                     ``hobflops_conv2d`` calls with f32 kernels, paying
+                     activation decode/re-encode *and* weight
+                     re-encoding at every layer.  The headline
+                     ``speedup_vs_roundtrip`` is against this (the
+                     trajectory baseline: what callers paid before the
+                     resident pipeline existed).
+* ``roundtrip_preencoded`` — per-layer calls with ``ConvWeights``:
+                     isolates the activation-residency saving alone
+                     (``speedup_vs_preencoded``) from the weight
+                     pre-encoding saving, which per-layer callers can
+                     also get via ``hobflops_conv2d(ConvWeights)``.
+
+All three produce bit-identical outputs (tests assert it).  Timing is
+best-of-reps, interleaved rep-by-rep, to reject scheduler noise on
+shared CPUs.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core.fpformat import HOBFLOPS_FORMATS
+from repro.kernels.conv2d_bitslice.network import (ConvLayerSpec,
+                                                   HobflopsNetwork)
+from repro.kernels.conv2d_bitslice.ops import hobflops_conv2d
+
+# Workload: depth x (1x1, C->C) convs on a HW x HW feature map.
+HW_, C_, DEPTH_, KH_ = 14, 8, 8, 1
+
+
+def _time_all(fns, iters: int = 20, reps: int = 8):
+    """Best-of-reps for several contenders, *interleaved* rep-by-rep so
+    scheduler noise on shared CPUs hits every contender equally."""
+    for fn in fns:
+        jax.block_until_ready(fn())
+    best = [float("inf")] * len(fns)
+    for _ in range(reps):
+        for i, fn in enumerate(fns):
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                out = fn()
+            jax.block_until_ready(out)
+            best[i] = min(best[i], (time.perf_counter() - t0) / iters)
+    return best
+
+
+def build_stack(fmt_name: str, hw: int = HW_, c: int = C_,
+                depth: int = DEPTH_, kh: int = KH_, seed: int = 0):
+    """Returns (images, f32 kernel list, HobflopsNetwork)."""
+    fmt = HOBFLOPS_FORMATS[fmt_name]
+    rng = np.random.default_rng(seed)
+    img = rng.standard_normal((1, hw, hw, c)).astype(np.float32)
+    kernels = [(rng.standard_normal((kh, kh, c, c)) * 0.3)
+               .astype(np.float32) for _ in range(depth)]
+    net = HobflopsNetwork([ConvLayerSpec(k, fmt, relu=True)
+                           for k in kernels])
+    return img, kernels, net
+
+
+def bench_network(fmt_name: str, hw: int = HW_, c: int = C_,
+                  depth: int = DEPTH_, kh: int = KH_,
+                  iters: int = 20, reps: int = 8, stack=None) -> dict:
+    img, kernels, net = stack or build_stack(fmt_name, hw, c, depth, kh)
+    fmt = HOBFLOPS_FORMATS[fmt_name]
+    macs = net.macs(img.shape)
+
+    def roundtrip():
+        x = img
+        for k in kernels:
+            x = hobflops_conv2d(x, k, fmt=fmt, relu=True, backend="jnp")
+        return x
+
+    def roundtrip_preencoded():
+        x = img
+        for w in net.weights:
+            x = hobflops_conv2d(x, w, fmt=fmt, relu=True, backend="jnp")
+        return x
+
+    dt_res, dt_rt, dt_pre = _time_all(
+        [lambda: net(img), roundtrip, roundtrip_preencoded], iters, reps)
+    return {
+        "format": fmt_name, "depth": depth, "hw": hw, "c": c, "kh": kh,
+        "macs": macs,
+        "resident_macs_per_s": macs / dt_res,
+        "roundtrip_macs_per_s": macs / dt_rt,
+        "roundtrip_preencoded_macs_per_s": macs / dt_pre,
+        "resident_us_per_call": dt_res * 1e6,
+        "roundtrip_us_per_call": dt_rt * 1e6,
+        "roundtrip_preencoded_us_per_call": dt_pre * 1e6,
+        "speedup_vs_roundtrip": dt_rt / dt_res,
+        "speedup_vs_preencoded": dt_pre / dt_res,
+    }
+
+
+def smoke(fmt_name: str = "hobflops8", hw: int = 6, c: int = 8,
+          depth: int = 3) -> dict:
+    """Tiny run for the tier-1 smoke test: builds the stack, checks the
+    resident path is bit-exact vs the per-layer roundtrip, and returns
+    a result row (1 iter, 1 rep, stack reused)."""
+    stack = build_stack(fmt_name, hw, c, depth)
+    img, _, net = stack
+    res = np.asarray(net(img))
+    rt = np.asarray(net.run_roundtrip(img))
+    assert res.shape == net.out_shape(img.shape), (res.shape, img.shape)
+    assert (res == rt).all(), "resident != per-layer roundtrip"
+    return bench_network(fmt_name, hw, c, depth, iters=1, reps=1,
+                         stack=stack)
+
+
+def run(quick: bool = False):
+    formats = ["hobflops8", "hobflops9"] if quick else \
+        ["hobflops8", "hobflops9", "hobflops10", "hobflops16"]
+    rows = ["impl,format,macs_per_s,us_per_call,speedup_vs_roundtrip"]
+    results = {"workload": {"hw": HW_, "c": C_, "depth": DEPTH_,
+                            "kh": KH_},
+               "formats": {}}
+    for name in formats:
+        r = bench_network(name)
+        rows.append(f"network_resident,{name},"
+                    f"{r['resident_macs_per_s']:.3e},"
+                    f"{r['resident_us_per_call']:.1f},"
+                    f"{r['speedup_vs_roundtrip']:.2f}")
+        rows.append(f"network_roundtrip,{name},"
+                    f"{r['roundtrip_macs_per_s']:.3e},"
+                    f"{r['roundtrip_us_per_call']:.1f},1.00")
+        rows.append(f"network_roundtrip_preencoded,{name},"
+                    f"{r['roundtrip_preencoded_macs_per_s']:.3e},"
+                    f"{r['roundtrip_preencoded_us_per_call']:.1f},"
+                    f"{r['roundtrip_preencoded_macs_per_s'] / r['roundtrip_macs_per_s']:.2f}")
+        results["formats"][name] = r
+    return "\n".join(rows), results
+
+
+if __name__ == "__main__":
+    text, _ = run()
+    print(text)

@@ -3,6 +3,8 @@
   gates      — MAC gate counts per cell library (paper Figs 7, 8b, 9b)
   macs       — MACs/s bitslice vs SoftFP word emulation (Figs 6, 8a, 9a)
   conv       — CNN convolution layer in HOBFLOPS (paper §3.4/§4)
+  network    — multi-layer stack: bitslice-resident pipeline vs
+               per-layer decode/re-encode (paper §3.4, DESIGN.md §8)
   roofline   — assembled dry-run roofline table (§Roofline), if
                experiments/dryrun has been populated
 
@@ -20,7 +22,7 @@ import json
 import os
 import time
 
-_JSON_SECTIONS = ("gates", "macs")
+_JSON_SECTIONS = ("gates", "macs", "network")
 
 
 def _write_json(out_dir: str, section: str, results) -> str:
@@ -36,12 +38,12 @@ def main(argv=None):
     ap.add_argument("--quick", action="store_true",
                     help="small format subset (CI-speed)")
     ap.add_argument("--only", default=None,
-                    help="comma list: gates,macs,conv,roofline")
+                    help="comma list: gates,macs,conv,network,roofline")
     ap.add_argument("--out-dir", default=".",
                     help="directory for BENCH_<section>.json files")
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
-    sections = [s for s in ("gates", "macs", "conv", "roofline")
+    sections = [s for s in ("gates", "macs", "conv", "network", "roofline")
                 if only is None or s in only]
 
     for sec in sections:
@@ -57,6 +59,9 @@ def main(argv=None):
             elif sec == "conv":
                 from benchmarks import conv_layer
                 text, results = conv_layer.run(quick=args.quick)
+            elif sec == "network":
+                from benchmarks import network
+                text, results = network.run(quick=args.quick)
             else:
                 from benchmarks import roofline
                 text, results = roofline.run(quick=args.quick)

@@ -20,7 +20,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
 from repro.core import softfloat as sf
 from repro.core.bitslice import pack_planes_np, unpack_planes_np
 from repro.core.codegen import eval_netlist
-from repro.core.fpcore import build_add, build_mac, build_mac_chain, build_mul
+from repro.core.fpcore import (build_add, build_cast, build_mac,
+                               build_mac_chain, build_mul)
 from repro.core.fpformat import (EXC_INF, EXC_NAN, EXC_NORMAL, EXC_ZERO, RNE,
                                  RTZ, FPFormat)
 
@@ -67,6 +68,25 @@ def check(fmt_in, fmt_out, rounding, op):
     return True
 
 
+def check_cast(fmt_in, fmt_out, rounding):
+    """Exhaustive: build_cast == softfloat.fp_cast over every canonical
+    code (the inter-layer boundary op of the resident pipeline)."""
+    xs = all_canonical_codes(fmt_in)
+    g = build_cast(fmt_in, fmt_out, rounding)
+    out = eval_netlist(g, {"x": pack_planes_np(xs, fmt_in.nbits)})["out"]
+    got = unpack_planes_np(out, len(xs))
+    expect = sf.fp_cast(xs, fmt_in, fmt_out, rounding)
+    bad = got != expect
+    print(f"cast {fmt_in}->{fmt_out} {rounding}: {len(xs)} codes, "
+          f"{bad.sum()} mismatches, gates={g.live_gate_count()}")
+    if bad.any():
+        for i in np.nonzero(bad)[0][:10]:
+            print(f"  x={xs[i]:x} ({sf.decode(xs[i], fmt_in)}) "
+                  f"got={got[i]:x} want={expect[i]:x}")
+        return False
+    return True
+
+
 def check_chain(fmt_in, k, rounding=RNE, n=8192, seed=0):
     """Random-vector equivalence: build_mac_chain == k x build_mac."""
     fmt_out = fmt_in.mult_out()
@@ -103,6 +123,8 @@ def run_checks(quick: bool = False) -> bool:
     ok &= check(f32, f32.mult_out(), RNE, "mul")
     ok &= check(FPFormat(3, 3), FPFormat(3, 3), RNE, "add")
     ok &= check_chain(f32, 2, RNE)
+    # accumulator-format -> operand-format cast (the layer boundary)
+    ok &= check_cast(f32.mult_out(), f32, RNE)
     if not quick:
         ok &= check(f32, f32.mult_out(True), RNE, "mul")
         ok &= check(f32, f32.mult_out(), RTZ, "mul")
@@ -110,6 +132,9 @@ def run_checks(quick: bool = False) -> bool:
         ok &= check(FPFormat(4, 2), FPFormat(4, 2), RNE, "add")
         ok &= check_chain(f32, 4, RTZ)
         ok &= check_chain(FPFormat(5, 2), 4, RNE)
+        ok &= check_cast(f32.mult_out(), f32, RTZ)
+        ok &= check_cast(FPFormat(5, 3).mult_out(), FPFormat(5, 2), RNE)
+        ok &= check_cast(FPFormat(3, 2), FPFormat(4, 4), RNE)
     return ok
 
 

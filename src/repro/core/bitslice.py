@@ -9,12 +9,18 @@ SIMD width is whatever array of lane words we process at once — each
 """
 from __future__ import annotations
 
+import dataclasses
+
 import numpy as np
+
+from .fpformat import FPFormat
 
 try:
     import jax.numpy as jnp
+    from jax import tree_util as _tree_util
 except ImportError:  # pragma: no cover
     jnp = None
+    _tree_util = None
 
 
 # ---------------------------------------------------------------------------
@@ -53,15 +59,23 @@ def unpack_planes_np(planes: np.ndarray, n: int,
 # jnp transforms (int32 lane words; TPU data path)
 # ---------------------------------------------------------------------------
 def pack_planes(codes, nbits: int, lane_bits: int = 32):
-    """[..., N] int32 codes -> [nbits, ..., N // lane_bits] int32 planes.
+    """[..., N] int32 codes -> [nbits, ..., ceil(N / lane_bits)] int32
+    planes.
 
-    N must be a multiple of lane_bits.  Uses a matmul-free bit-gather so
-    it lowers to pure vector ops on TPU.
+    N is zero-padded to a multiple of lane_bits internally (mirroring
+    ``pack_planes_np``).  Uses a matmul-free bit-gather so it lowers to
+    pure vector ops on TPU.
     """
     assert jnp is not None
     codes = jnp.asarray(codes, dtype=jnp.int32)
     n = codes.shape[-1]
-    assert n % lane_bits == 0, f"lane dim {n} % {lane_bits} != 0"
+    pad = (-n) % lane_bits
+    if pad:
+        # Mirror pack_planes_np: zero-pad the lane dim to a full word
+        # (the all-zero code is +0, the MAC identity).
+        widths = [(0, 0)] * (codes.ndim - 1) + [(0, pad)]
+        codes = jnp.pad(codes, widths)
+        n += pad
     grouped = codes.reshape(*codes.shape[:-1], n // lane_bits, lane_bits)
     weights = (jnp.int32(1) << jnp.arange(lane_bits, dtype=jnp.int32))
     planes = []
@@ -82,3 +96,68 @@ def unpack_planes(planes, lane_bits: int = 32):
         term = bits.astype(jnp.int32) << b
         codes = term if codes is None else codes | term
     return codes.reshape(*codes.shape[:-2], -1)
+
+
+# ---------------------------------------------------------------------------
+# Bitslice-resident activation carrier (the inter-layer HOBFLOPS tensor)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(eq=False)
+class BitsliceActivation:
+    """A feature map held in the HOBFLOPS bitslice domain.
+
+    This is the tensor that flows *between* layers of the
+    bitslice-resident pipeline (paper §3.4: "data stays in HOBFLOPS
+    format between layers"; DESIGN.md §8): the OFM bit planes exactly as
+    the MAC kernel emits them, so chaining layers is zero-copy.
+
+    Layout (the kernel's native OFM layout):
+
+    * ``planes`` — ``[fmt.nbits, P, Mw]`` int32: plane ``b``, row ``p``,
+      lane word ``w`` holds bit ``b`` of the codes for pixel ``p``,
+      channels ``32*w .. 32*w+31`` (channels packed along int32 lanes).
+    * ``shape``  — the logical NHWC shape ``(B, H, W, C)``.  ``P`` is
+      ``B*H*W`` padded up to the kernel's row blocking and ``Mw*32 >= C``
+      (padded rows/lanes hold the all-zero +0 code, the MAC identity).
+    * ``fmt``    — the FPFormat of the stored codes (a layer output
+      carries the accumulator format ``fmt.mult_out(extended)`` until
+      cast back down at the next layer's boundary).
+
+    Registered as a JAX pytree (``planes`` is the only leaf; ``fmt`` and
+    ``shape`` ride in the static treedef), so activations pass through
+    ``jax.jit`` boundaries with the format as compile-time structure.
+    """
+    planes: "jnp.ndarray"
+    fmt: FPFormat
+    shape: tuple[int, int, int, int]
+
+    def __post_init__(self):
+        assert len(self.shape) == 4, self.shape
+        # jax may unflatten with non-array placeholders; only check
+        # real (possibly traced) arrays.
+        if getattr(self.planes, "ndim", None) == 3:
+            assert self.planes.shape[0] == self.fmt.nbits, \
+                (self.planes.shape, self.fmt)
+
+    @property
+    def nbits(self) -> int:
+        return self.fmt.nbits
+
+    @property
+    def n_pixels(self) -> int:
+        B, H, W, _ = self.shape
+        return B * H * W
+
+    def tree_flatten(self):
+        return (self.planes,), (self.fmt, self.shape)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        fmt, shape = aux
+        return cls(children[0], fmt, shape)
+
+
+if _tree_util is not None:  # pragma: no branch
+    _tree_util.register_pytree_node(
+        BitsliceActivation,
+        BitsliceActivation.tree_flatten,
+        BitsliceActivation.tree_unflatten)

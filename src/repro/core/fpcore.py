@@ -189,6 +189,72 @@ def build_mul(fmt_in: FPFormat, fmt_out: FPFormat,
 
 
 # ---------------------------------------------------------------------------
+# Format cast: rebias exponent + re-round significand into fmt_out
+# ---------------------------------------------------------------------------
+def cast_val(g: Graph, xv: FPVal, fmt_in: FPFormat, fmt_out: FPFormat,
+             rounding: str = RNE) -> FPVal:
+    """Unpacked-domain format conversion: FPVal(fmt_in) -> FPVal(fmt_out).
+
+    Gate-level twin of ``softfloat.fp_cast`` (same FloPoCo semantics:
+    widening is exact, narrowing re-rounds, overflow saturates to inf,
+    underflow flushes to +0, exact zeros keep their sign).  Like
+    :func:`mul_val`/:func:`add_val` it tolerates garbage exp/frac wires
+    on non-normal inputs — every non-normal outcome is selected from the
+    exception flags alone — so it composes after a MAC chain without an
+    intervening canonical pack.
+    """
+    wf_i, wf_o = fmt_in.w_f, fmt_out.w_f
+    we_i, we_o = fmt_in.w_e, fmt_out.w_e
+
+    if wf_o >= wf_i:
+        frac_r = [FALSE] * (wf_o - wf_i) + list(xv.frac[:wf_i])
+        carry = FALSE
+    else:
+        drop = wf_i - wf_o
+        kept = list(xv.frac[drop:wf_i])
+        rnd = xv.frac[drop - 1]
+        sticky = B.or_reduce(g, xv.frac[:drop - 1])
+        frac_r, carry = _round_bits(g, kept, rnd, sticky, rounding)
+        frac_r = frac_r[:wf_o]   # on carry the increment wrapped to 0
+
+    # e_res = exp - bias_in + bias_out + carry, two's complement.
+    W = max(we_i, we_o) + 2
+    delta = (fmt_out.bias - fmt_in.bias) % (1 << W)
+    e_ext = list(xv.exp[:we_i]) + [FALSE] * (W - we_i)
+    e_res, _ = B.ripple_add(g, e_ext, B.const_bus(g, delta, W),
+                            cin=carry, width=W)
+    neg = e_res[W - 1]
+    underflow = neg
+    overflow = g.AND(g.NOT(neg), B.or_reduce(g, e_res[we_o:W - 1]))
+
+    nan = xv.nan
+    inf = g.OR(xv.inf, g.AND(xv.normal, overflow))
+    uf_zero = g.AND(xv.normal, underflow)
+    zero = g.OR(xv.zero, uf_zero)
+    normal = g.AND(xv.normal, g.AND(g.NOT(underflow), g.NOT(overflow)))
+    sign = g.AND(xv.sign, g.NOT(g.OR(nan, uf_zero)))
+    return FPVal(zero, normal, inf, nan, sign, e_res[:we_o], frac_r)
+
+
+def cast_wires(g: Graph, x: list[int], fmt_in: FPFormat, fmt_out: FPFormat,
+               rounding: str = RNE) -> list[int]:
+    v = cast_val(g, unpack_val(g, x, fmt_in), fmt_in, fmt_out, rounding)
+    return pack_val(g, v, fmt_out)
+
+
+def build_cast(fmt_in: FPFormat, fmt_out: FPFormat,
+               rounding: str = RNE) -> Graph:
+    """Combinational fmt_in -> fmt_out converter (input ``x``, output
+    ``out``).  The bitslice-resident pipeline maps this through
+    ``opt.optimize_mapped`` and runs it once per layer boundary to round
+    the accumulator format back to the next layer's operand format."""
+    g = Graph()
+    x = g.input_bus("x", fmt_in.nbits)
+    g.output_bus("out", cast_wires(g, x, fmt_in, fmt_out, rounding))
+    return g
+
+
+# ---------------------------------------------------------------------------
 # Adder
 # ---------------------------------------------------------------------------
 def add_val(g: Graph, xv: FPVal, yv: FPVal, fmt: FPFormat,

@@ -344,6 +344,52 @@ def decode_jnp(codes, fmt: FPFormat):
     return val
 
 
+# ---------------------------------------------------------------------------
+# Format cast: (fmt_in) -> fmt_out, re-rounding the significand
+# ---------------------------------------------------------------------------
+def fp_cast(x, fmt_in: FPFormat, fmt_out: FPFormat, rounding: str = RNE,
+            xp=np):
+    """FloPoCo-semantics format conversion on code words.
+
+    Re-biases the exponent and re-rounds the significand into
+    ``fmt_out`` (exact when ``fmt_out.w_f >= fmt_in.w_f``).  Overflow
+    saturates to infinity, underflow flushes to +0 (matching the
+    mul/encode datapaths); exact zeros keep their sign.  For formats
+    whose values are exactly representable in float32 this agrees
+    bit-for-bit with ``encode(decode(x, fmt_in), fmt_out)`` — decode is
+    exact, so there is no double rounding.  This is the inter-layer
+    boundary operation of the bitslice-resident pipeline (DESIGN.md §8);
+    the gate-level twin is ``fpcore.build_cast``.
+    """
+    exc, sign, exp, frac = unpack(x, fmt_in, xp)
+    idt = _idt(xp)
+
+    shift = fmt_out.w_f - fmt_in.w_f
+    if shift >= 0:
+        frac_r = frac << shift
+        carry = xp.zeros_like(frac)
+    else:
+        frac_r = _round_drop(frac, -shift, rounding, xp)
+        carry = (frac_r >> fmt_out.w_f) & 1       # rounded up to 2.0
+        frac_r = xp.where(carry == 1, 0, frac_r) & ((1 << fmt_out.w_f) - 1)
+
+    e_res = exp - fmt_in.bias + fmt_out.bias + carry
+    underflow = e_res < 0
+    overflow = e_res > fmt_out.emax
+
+    x_norm = exc == EXC_NORMAL
+    nan = exc == EXC_NAN
+    inf = (~nan) & ((exc == EXC_INF) | (x_norm & overflow))
+    zero = (~nan) & (~inf) & ((exc == EXC_ZERO) | (x_norm & underflow))
+    exc_out = xp.where(nan, EXC_NAN,
+                       xp.where(inf, EXC_INF,
+                                xp.where(zero, EXC_ZERO, EXC_NORMAL)))
+    sign = xp.where(nan, 0, sign)
+    sign = xp.where(x_norm & underflow & zero, 0, sign)  # flush is +0
+    e_res = xp.clip(e_res, 0, fmt_out.emax).astype(idt)
+    return pack(exc_out, sign, e_res, frac_r, fmt_out, xp)
+
+
 def fp_mac(x, y, acc, fmt_in: FPFormat, fmt_out: FPFormat,
            rounding: str = RNE, xp=np):
     """HOBFLOPS MAC semantics: round the product to fmt_out, then add to

@@ -33,7 +33,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.codegen import make_jax_fn
-from repro.core.fpcore import build_mac_chain
+from repro.core.fpcore import build_cast, build_mac_chain
 from repro.core.fpformat import RNE, FPFormat
 from repro.core.opt import optimize_mapped
 
@@ -47,6 +47,20 @@ def mac_chain_netlist_fn(fmt: FPFormat, k: int, extended: bool,
     netlist additionally goes through the post-mapping optimization
     passes (constant propagation, remap iteration, dead-node sweep)."""
     g = build_mac_chain(fmt, k, extended, rounding)
+    mapped = optimize_mapped(g, lib)
+    return make_jax_fn(mapped), mapped
+
+
+@functools.lru_cache(maxsize=None)
+def cast_netlist_fn(fmt_in: FPFormat, fmt_out: FPFormat, rounding: str,
+                    lib: str = "tpu_vpu"):
+    """Optimized ``lib``-mapped fmt_in -> fmt_out cast as a traceable fn.
+
+    The inter-layer boundary op of the bitslice-resident pipeline
+    (DESIGN.md §8): applied once per plane array between layers, it
+    replaces the whole unpack -> decode -> f32 -> encode -> repack
+    round-trip with a few dozen bitwise ops."""
+    g = build_cast(fmt_in, fmt_out, rounding)
     mapped = optimize_mapped(g, lib)
     return make_jax_fn(mapped), mapped
 

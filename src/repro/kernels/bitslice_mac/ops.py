@@ -37,34 +37,75 @@ def _pad_to(x, mult, axis):
     return jnp.pad(x, widths)
 
 
+def encode_input_masks(i_f32, fmt: FPFormat, rounding: str = RNE,
+                       p_block: int = 8, c_block: int = 64):
+    """float32 [P,C] -> i_masks [P',C',NIN] int32 in {0,-1} (bit
+    broadcast masks), P/C zero-padded to the block multiples."""
+    ic = sf.encode_jnp(i_f32, fmt, rounding)        # [P, C] int32
+    ic = _pad_to(_pad_to(ic, p_block, 0), c_block, 1)
+    bits = (ic[..., None] >> jnp.arange(fmt.nbits, dtype=jnp.int32)) & 1
+    return -bits.astype(jnp.int32)                   # 0 / -1 masks
+
+
+def encode_weight_planes(w_f32, fmt: FPFormat, rounding: str = RNE,
+                         c_block: int = 1, m_block: int = 1):
+    """float32 [C,M] -> w_planes [C',NIN,Mw] int32 bit planes (M packed
+    along int32 lanes).  Static inference weights should be encoded
+    once through this and passed to ``hobflops_matmul(w_planes=...)`` /
+    ``conv2d_bitslice.encode_conv_weights`` instead of re-encoding f32
+    kernels on every call.  Defaults carry minimal padding (M to the
+    next lane word only) so one encoding serves any launch block
+    configuration; launch-time padding happens at the call site."""
+    wc = sf.encode_jnp(w_f32, fmt, rounding)        # [C, M] int32
+    wc = _pad_to(_pad_to(wc, c_block, 0), m_block * LANE, 1)
+    return jnp.moveaxis(pack_planes(wc, fmt.nbits), 0, 1)  # [C, NIN, Mw]
+
+
 def encode_inputs(i_f32, w_f32, fmt: FPFormat, rounding: str = RNE,
                   p_block: int = 8, m_block: int = 128, c_block: int = 64):
-    """float32 [P,C] x [C,M] -> (i_masks [P,C,NIN], w_planes [C,NIN,Mw])."""
-    ic = sf.encode_jnp(i_f32, fmt, rounding)        # [P, C] int32
-    wc = sf.encode_jnp(w_f32, fmt, rounding)        # [C, M] int32
-    ic = _pad_to(_pad_to(ic, p_block, 0), c_block, 1)
-    wc = _pad_to(_pad_to(wc, c_block, 0), m_block * LANE, 1)
-    nin = fmt.nbits
-    bits = (ic[..., None] >> jnp.arange(nin, dtype=jnp.int32)) & 1
-    i_masks = -bits.astype(jnp.int32)                # 0 / -1 masks
-    w_planes = jnp.moveaxis(pack_planes(wc, nin), 0, 1)  # [C, NIN, Mw]
-    return i_masks, w_planes
+    """float32 [P,C] x [C,M] -> (i_masks [P,C,NIN], w_planes [C,NIN,Mw]),
+    both padded out to the given launch blocks."""
+    return (encode_input_masks(i_f32, fmt, rounding, p_block, c_block),
+            encode_weight_planes(w_f32, fmt, rounding, c_block, m_block))
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "fmt", "extended", "rounding", "backend", "interpret",
+    "fmt", "extended", "rounding", "backend", "interpret", "cout",
     "p_block", "m_block", "c_block", "c_unroll"))
-def hobflops_matmul(i_f32, w_f32, *, fmt: FPFormat, extended: bool = False,
+def hobflops_matmul(i_f32, w_f32=None, *, fmt: FPFormat,
+                    w_planes=None, cout: int | None = None,
+                    extended: bool = False,
                     rounding: str = RNE, backend: str = "pallas",
                     interpret: bool = False, p_block: int = 8,
                     m_block: int = 128, c_block: int = 64,
                     c_unroll: int = 4):
-    """GEMM [P,C] @ [C,M] -> [P,M] float32, in HOBFLOPS arithmetic."""
+    """GEMM [P,C] @ [C,M] -> [P,M] float32, in HOBFLOPS arithmetic.
+
+    Weights are given either as float32 ``w_f32`` [C,M] (encoded to bit
+    planes on every call) or pre-encoded ``w_planes`` [C,NIN,Mw] from
+    :func:`encode_weight_planes` (``cout`` recovers M when it is not a
+    full lane-word multiple).  Inference-time callers should pre-encode.
+    """
     P, C = i_f32.shape
-    C2, M = w_f32.shape
-    assert C == C2
-    i_masks, w_planes = encode_inputs(i_f32, w_f32, fmt, rounding,
-                                      p_block, m_block, c_block)
+    if w_planes is None:
+        C2, M = w_f32.shape
+        assert C == C2
+    else:
+        assert w_f32 is None, "pass either w_f32 or w_planes, not both"
+        C2, nin, Mw = w_planes.shape
+        assert C == C2 and nin == fmt.nbits, (w_planes.shape, fmt)
+        M = cout if cout is not None else Mw * LANE
+        assert M <= Mw * LANE
+    # Clamp blocks to the problem so padding never exceeds one block.
+    p_block = max(1, min(p_block, P))
+    c_block = max(1, min(c_block, C))
+    m_block = max(1, min(m_block, -(-M // LANE)))
+    i_masks = encode_input_masks(i_f32, fmt, rounding, p_block, c_block)
+    if w_planes is None:
+        w_planes = encode_weight_planes(w_f32, fmt, rounding, c_block,
+                                        m_block)
+    else:
+        w_planes = _pad_to(_pad_to(w_planes, c_block, 0), m_block, 2)
     if backend == "pallas":
         out = bitslice_mac_pallas(
             i_masks, w_planes, fmt=fmt, extended=extended,

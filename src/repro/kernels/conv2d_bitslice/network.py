@@ -1,0 +1,158 @@
+"""Multi-layer CNN inference that stays in the HOBFLOPS bitslice domain.
+
+The paper's throughput story (§3.4, Fig. 5) assumes IFM data remains in
+bitslice format *between* layers.  :class:`HobflopsNetwork` realizes
+that flow (DESIGN.md §8): activations are encoded to bit planes exactly
+once at the network input, every interior layer boundary is a
+plane-domain cast (``fpcore.build_cast``) + plane-domain im2col
+(``ops.activation_patch_masks``) — pure bitwise/gather ops, no float32
+materialization — and values are decoded exactly once at the output.
+
+Weights are encoded to bit planes once at construction
+(:class:`~repro.kernels.conv2d_bitslice.ops.ConvWeights`) and the
+compiled MAC-chain / cast netlists are shared across layers with the
+same format, so repeated inference calls pay zero re-encoding cost.
+
+``run_roundtrip`` executes the same network through the per-layer
+``hobflops_conv2d`` (decode to f32 / re-encode at every boundary) —
+bit-exact to the resident path (``softfloat.fp_cast`` equals
+encode∘decode; tests verify).  ``benchmarks/network.py`` measures the
+resident speedup against the equivalent per-layer chains, with f32
+kernels (the pre-PR caller cost) and with pre-encoded weights
+(isolating the activation-residency saving).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Sequence
+
+import jax
+import numpy as np
+
+from repro.core.fpformat import RNE, FPFormat
+from repro.kernels.conv2d_bitslice.ops import (ConvWeights,
+                                               cast_activations, conv_core,
+                                               conv_out_hw,
+                                               decode_activations,
+                                               encode_activations,
+                                               encode_conv_weights,
+                                               hobflops_conv2d)
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerCfg:
+    """Static per-layer configuration (hashable: rides in jit closures)."""
+    stride: int = 1
+    padding: str = "SAME"
+    relu: bool = True
+    extended: bool = False
+    rounding: str = RNE
+
+
+@dataclasses.dataclass
+class ConvLayerSpec:
+    """One conv layer of a :class:`HobflopsNetwork`.
+
+    ``kernels`` is an f32 ``[kh, kw, cin, cout]`` array or a pre-encoded
+    :class:`ConvWeights`; ``fmt`` is the layer's *operand* format (the
+    accumulator runs at ``fmt.mult_out(extended)`` and is cast back down
+    at the next layer's boundary).
+    """
+    kernels: object
+    fmt: FPFormat
+    stride: int = 1
+    padding: str = "SAME"
+    relu: bool = True
+    extended: bool = False
+    rounding: str = RNE
+
+    def cfg(self) -> LayerCfg:
+        return LayerCfg(self.stride, self.padding, self.relu,
+                        self.extended, self.rounding)
+
+
+def _run_resident(images, weights, *, cfgs, backend, interpret):
+    act = encode_activations(images, weights[0].fmt, cfgs[0].rounding)
+    for w, c in zip(weights, cfgs):
+        # Layer boundary: round the previous accumulator format down to
+        # this layer's operand format as a bitwise netlist (identity at
+        # the entry layer).  No f32 anywhere between encode and decode.
+        act = cast_activations(act, w.fmt, c.rounding)
+        act = conv_core(act, w, stride=c.stride, padding=c.padding,
+                        extended=c.extended, rounding=c.rounding,
+                        relu=c.relu, backend=backend, interpret=interpret)
+    return decode_activations(act)
+
+
+def _run_roundtrip(images, weights, *, cfgs, backend, interpret):
+    x = images
+    for w, c in zip(weights, cfgs):
+        x = hobflops_conv2d(x, w, fmt=w.fmt, stride=c.stride,
+                            padding=c.padding, relu=c.relu,
+                            extended=c.extended, rounding=c.rounding,
+                            backend=backend, interpret=interpret)
+    return x
+
+
+class HobflopsNetwork:
+    """A sequential stack of HOBFLOPS conv layers, bitslice-resident.
+
+    >>> net = HobflopsNetwork([ConvLayerSpec(k1, fmt), ConvLayerSpec(k2, fmt)])
+    >>> y = net(x)                  # one encode, one decode
+    >>> y_ref = net.run_roundtrip(x)   # per-layer f32 boundaries (baseline)
+    """
+
+    def __init__(self, layers: Sequence[ConvLayerSpec],
+                 backend: str = "jnp", interpret: bool = False):
+        assert layers, "need at least one layer"
+        self.weights: tuple[ConvWeights, ...] = tuple(
+            spec.kernels if isinstance(spec.kernels, ConvWeights)
+            else encode_conv_weights(np.asarray(spec.kernels, np.float32),
+                                     spec.fmt, spec.rounding)
+            for spec in layers)
+        for spec, w in zip(layers, self.weights):
+            assert w.fmt == spec.fmt, (w.fmt, spec.fmt)
+        for prev, nxt in zip(self.weights, self.weights[1:]):
+            assert prev.cout == nxt.cin, \
+                f"layer chain mismatch: cout {prev.cout} -> cin {nxt.cin}"
+        self.cfgs: tuple[LayerCfg, ...] = tuple(s.cfg() for s in layers)
+        self.backend = backend
+        self._resident = jax.jit(functools.partial(
+            _run_resident, cfgs=self.cfgs, backend=backend,
+            interpret=interpret))
+        self._roundtrip = jax.jit(functools.partial(
+            _run_roundtrip, cfgs=self.cfgs, backend=backend,
+            interpret=interpret))
+
+    def __call__(self, images):
+        """f32 NHWC -> f32 NHWC through the bitslice-resident pipeline
+        (single activation encode, single decode)."""
+        return self._resident(images, self.weights)
+
+    run_resident = __call__
+
+    def run_roundtrip(self, images):
+        """Same network through chained single-layer ``hobflops_conv2d``
+        calls (f32 decode/re-encode at every layer boundary).
+        Bit-exact to :meth:`run_resident`; exists as the equivalence
+        oracle and the benchmark baseline."""
+        return self._roundtrip(images, self.weights)
+
+    def out_shape(self, in_shape) -> tuple[int, int, int, int]:
+        """NHWC output shape for an NHWC input shape."""
+        B, H, W, C = in_shape
+        assert C == self.weights[0].cin, (C, self.weights[0].cin)
+        for w, c in zip(self.weights, self.cfgs):
+            H, W = conv_out_hw(H, W, w.kh, w.kw, c.stride, c.padding)
+            C = w.cout
+        return (B, H, W, C)
+
+    def macs(self, in_shape) -> int:
+        """Total multiply-accumulates for one forward pass."""
+        B, H, W, _ = in_shape
+        total = 0
+        for w, c in zip(self.weights, self.cfgs):
+            H, W = conv_out_hw(H, W, w.kh, w.kw, c.stride, c.padding)
+            total += B * H * W * w.kh * w.kw * w.cin * w.cout
+        return total

@@ -5,33 +5,68 @@ patches [B*Ho*Wo, kh*kw*C] against kernels [kh*kw*C, M] (the paper's
 Fig. 5 layout with LANES of kernels per bitslice word).  ReLU runs *in
 the HOBFLOPS domain* as one bitwise op per plane: clearing every plane
 where the sign plane is set maps negative values to the canonical +0
-code (exc=00) — activation for free inside the bitslice pipeline,
-exactly the "data stays in HOBFLOPS format between layers" flow of
-paper §3.4.
+code (exc=00) — activation for free inside the bitslice pipeline.
+
+The layer is split into explicit stages so multi-layer networks stay in
+the bitslice domain between layers — the "data stays in HOBFLOPS format
+between layers" flow of paper §3.4, realized end-to-end by
+``conv2d_bitslice.network.HobflopsNetwork`` (DESIGN.md §8):
+
+* :func:`encode_activations`   — f32 NHWC -> :class:`BitsliceActivation`
+* :func:`conv_core`            — activation x ConvWeights -> activation
+                                 (plane-domain im2col + bitslice MAC
+                                 + in-domain ReLU)
+* :func:`cast_activations`     — accumulator-format planes -> next
+                                 layer's operand format, via the
+                                 optimized ``build_cast`` netlist
+* :func:`decode_activations`   — activation -> f32 NHWC
+
+``hobflops_conv2d`` composes encode/conv_core/decode for the one-layer
+case and is bit-exact to the seed implementation.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 import time
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import softfloat as sf
+from repro.core.bitslice import (BitsliceActivation, pack_planes,
+                                 unpack_planes)
 from repro.core.fpformat import RNE, FPFormat
-from repro.kernels.bitslice_mac.kernel import bitslice_mac_pallas
+from repro.kernels.bitslice_mac.kernel import (bitslice_mac_pallas,
+                                               cast_netlist_fn)
 from repro.kernels.bitslice_mac.ops import (LANE, _bitslice_mac_jnp,
-                                            encode_inputs)
+                                            _pad_to, encode_weight_planes)
+
+
+def _conv_pad(H: int, W: int, kh: int, kw: int, stride: int,
+              padding: str) -> tuple[int, int]:
+    """Total (pad_h, pad_w) applied by :func:`im2col`."""
+    if padding == "SAME":
+        return (max((-(-H // stride) - 1) * stride + kh - H, 0),
+                max((-(-W // stride) - 1) * stride + kw - W, 0))
+    return 0, 0
+
+
+def conv_out_hw(H: int, W: int, kh: int, kw: int, stride: int = 1,
+                padding: str = "SAME") -> tuple[int, int]:
+    """Output spatial dims of :func:`im2col` (exact, incl. clamped
+    SAME padding) — used for launch-parameter derivation and the
+    network runner's shape plan."""
+    pad_h, pad_w = _conv_pad(H, W, kh, kw, stride, padding)
+    return ((H + pad_h - kh) // stride + 1,
+            (W + pad_w - kw) // stride + 1)
 
 
 def im2col(images, kh: int, kw: int, stride: int = 1,
            padding: str = "SAME"):
     """[B, H, W, C] -> patches [B, Ho, Wo, kh*kw*C]."""
     B, H, W, C = images.shape
-    if padding == "SAME":
-        pad_h = max((-(-H // stride) - 1) * stride + kh - H, 0)
-        pad_w = max((-(-W // stride) - 1) * stride + kw - W, 0)
-    else:
-        pad_h = pad_w = 0
+    pad_h, pad_w = _conv_pad(H, W, kh, kw, stride, padding)
     x = jnp.pad(images, ((0, 0), (pad_h // 2, pad_h - pad_h // 2),
                          (pad_w // 2, pad_w - pad_w // 2), (0, 0)))
     Ho = (x.shape[1] - kh) // stride + 1
@@ -52,6 +87,114 @@ def hobflops_relu_planes(planes, fmt: FPFormat):
     sign = planes[fmt.sign_off]
     keep = ~sign
     return planes & keep[None]
+
+
+# ---------------------------------------------------------------------------
+# Pre-encoded conv weights (encode static kernels once, reuse per call)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(eq=False)
+class ConvWeights:
+    """Conv kernels pre-encoded to HOBFLOPS bit planes.
+
+    ``planes`` is ``[kh*kw*cin, NIN, Mw]`` int32 (reduction axis in
+    im2col (i, j, c) order, output channels packed along int32 lanes).
+    Registered as a JAX pytree — the geometry and format ride in the
+    static treedef, so a ConvWeights passes through ``jax.jit``.
+    """
+    planes: "jnp.ndarray"
+    kh: int
+    kw: int
+    cin: int
+    cout: int
+    fmt: FPFormat
+
+    def tree_flatten(self):
+        return ((self.planes,),
+                (self.kh, self.kw, self.cin, self.cout, self.fmt))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], *aux)
+
+
+jax.tree_util.register_pytree_node(
+    ConvWeights, ConvWeights.tree_flatten, ConvWeights.tree_unflatten)
+
+
+def encode_conv_weights(kernels, fmt: FPFormat,
+                        rounding: str = RNE) -> ConvWeights:
+    """f32 [kh,kw,C,M] -> :class:`ConvWeights` (encode + bitslice once).
+
+    The planes carry minimal padding (M up to the next lane-word
+    multiple only); launch-time block padding happens in
+    :func:`conv_core`, so one encoding serves any block configuration.
+    """
+    kh, kw, C, M = kernels.shape
+    planes = encode_weight_planes(jnp.asarray(kernels).reshape(kh * kw * C,
+                                                               M),
+                                  fmt, rounding, c_block=1, m_block=1)
+    return ConvWeights(planes, kh, kw, C, M, fmt)
+
+
+# ---------------------------------------------------------------------------
+# Pipeline stages: encode / im2col-in-planes / conv_core / cast / decode
+# ---------------------------------------------------------------------------
+def encode_activations(images, fmt: FPFormat, rounding: str = RNE,
+                       p_block: int = 8) -> BitsliceActivation:
+    """f32 [B,H,W,C] -> bitslice activation (the pipeline's single
+    entry encode)."""
+    B, H, W, C = images.shape
+    codes = sf.encode_jnp(jnp.asarray(images).reshape(B * H * W, C),
+                          fmt, rounding)
+    codes = _pad_to(codes, min(p_block, B * H * W), 0)
+    planes = pack_planes(codes, fmt.nbits)     # pads C to a lane word
+    return BitsliceActivation(planes, fmt, (B, H, W, C))
+
+
+def decode_activations(act: BitsliceActivation):
+    """Bitslice activation -> f32 [B,H,W,C] (the single exit decode)."""
+    B, H, W, C = act.shape
+    codes = unpack_planes(act.planes)          # [P, Mw*LANE]
+    vals = sf.decode_jnp(codes, act.fmt)
+    return vals[:B * H * W, :C].reshape(B, H, W, C)
+
+
+def cast_activations(act: BitsliceActivation, dst_fmt: FPFormat,
+                     rounding: str = RNE) -> BitsliceActivation:
+    """Re-round an activation into ``dst_fmt`` without leaving the
+    bitslice domain: the optimized ``build_cast`` netlist runs as a few
+    dozen bitwise ops over the plane array.  Bit-exact to
+    decode -> f32 -> encode (``softfloat.fp_cast``; tests verify)."""
+    if act.fmt == dst_fmt:
+        return act
+    fn, _ = cast_netlist_fn(act.fmt, dst_fmt, rounding)
+    out = fn(x=act.planes)["out"]
+    out = jnp.broadcast_to(out, (dst_fmt.nbits,) + act.planes.shape[1:])
+    return BitsliceActivation(out, dst_fmt, act.shape)
+
+
+def activation_patch_masks(act: BitsliceActivation, kh: int, kw: int,
+                           stride: int = 1, padding: str = "SAME"):
+    """Plane-domain im2col: gather layer-(n+1) IFM patches directly
+    from layer-n output planes.
+
+    Expands the channel-lane-packed planes to per-(pixel, channel) 0/-1
+    broadcast masks (pure shift/mask ops — no f32 materialization),
+    restores the NHWC spatial structure, and gathers kh x kw patches in
+    the mask domain.  SAME padding inserts all-zero masks == the +0
+    code, the MAC identity.  Returns ``(i_masks [B*Ho*Wo, kh*kw*C, NIN],
+    (Ho, Wo))``.
+    """
+    nb = act.nbits
+    B, H, W, C = act.shape
+    shifts = jnp.arange(LANE, dtype=jnp.int32)
+    bits = (act.planes[:, :, :, None] >> shifts) & 1   # [nb, P, Mw, LANE]
+    masks = -bits.reshape(nb, bits.shape[1], -1)[:, :B * H * W, :C]
+    masks = jnp.moveaxis(masks, 0, -1)                 # [BHW, C, nb]
+    masks = masks.reshape(B, H, W, C * nb)
+    pat = im2col(masks, kh, kw, stride, padding)
+    _, Ho, Wo, _ = pat.shape
+    return pat.reshape(B * Ho * Wo, kh * kw * C, nb), (Ho, Wo)
 
 
 def derive_blocks(P: int, K: int, M: int, *, p_block: int | None = None,
@@ -80,6 +223,49 @@ def derive_blocks(P: int, K: int, M: int, *, p_block: int | None = None,
     return blocks
 
 
+def conv_core(act: BitsliceActivation, weights: ConvWeights, *,
+              stride: int = 1, padding: str = "SAME",
+              extended: bool = False, rounding: str = RNE,
+              relu: bool = False, backend: str = "jnp",
+              interpret: bool = False, p_block: int | None = None,
+              m_block: int | None = None, c_block: int | None = None,
+              c_unroll: int | None = None) -> BitsliceActivation:
+    """One conv layer entirely inside the bitslice domain.
+
+    Consumes an activation in the layer's operand format, performs the
+    plane-domain im2col + bitslice MAC (+ in-domain ReLU), and returns
+    the OFM activation in the accumulator format
+    ``weights.fmt.mult_out(extended)`` — ready to be cast to the next
+    layer's operand format by :func:`cast_activations` without touching
+    float32.
+    """
+    assert act.fmt == weights.fmt, (act.fmt, weights.fmt)
+    assert act.shape[3] == weights.cin, (act.shape, weights.cin)
+    i_masks, (Ho, Wo) = activation_patch_masks(
+        act, weights.kh, weights.kw, stride, padding)
+    B = act.shape[0]
+    P, K, M = B * Ho * Wo, weights.kh * weights.kw * weights.cin, \
+        weights.cout
+    blk = derive_blocks(P, K, M, p_block=p_block, m_block=m_block,
+                        c_block=c_block, c_unroll=c_unroll)
+    i_masks = _pad_to(_pad_to(i_masks, blk["p_block"], 0),
+                      blk["c_block"], 1)
+    w_planes = _pad_to(_pad_to(weights.planes, blk["c_block"], 0),
+                       blk["m_block"], 2)
+    if backend == "pallas":
+        out = bitslice_mac_pallas(i_masks, w_planes, fmt=weights.fmt,
+                                  extended=extended, rounding=rounding,
+                                  interpret=interpret, **blk)
+    else:
+        out = _bitslice_mac_jnp(i_masks, w_planes, fmt=weights.fmt,
+                                extended=extended, rounding=rounding,
+                                c_unroll=blk["c_unroll"])
+    fmt_out = weights.fmt.mult_out(extended)
+    if relu:
+        out = hobflops_relu_planes(out, fmt_out)
+    return BitsliceActivation(out, fmt_out, (B, Ho, Wo, M))
+
+
 @functools.partial(jax.jit, static_argnames=(
     "fmt", "kh", "kw", "stride", "padding", "extended", "rounding",
     "relu", "backend", "interpret", "p_block", "m_block", "c_block",
@@ -91,40 +277,28 @@ def hobflops_conv2d(images, kernels, *, fmt: FPFormat, stride: int = 1,
                     kh: int | None = None, kw: int | None = None,
                     p_block: int | None = None, m_block: int | None = None,
                     c_block: int | None = None, c_unroll: int | None = None):
-    """images [B,H,W,C] f32, kernels [kh,kw,C,M] f32 -> [B,Ho,Wo,M] f32
-    computed entirely in HOBFLOPS bitslice arithmetic.
+    """images [B,H,W,C] f32, kernels [kh,kw,C,M] f32 (or a pre-encoded
+    :class:`ConvWeights`) -> [B,Ho,Wo,M] f32 computed entirely in
+    HOBFLOPS bitslice arithmetic.
+
+    This is the one-layer composition encode -> conv_core -> decode.
+    Multi-layer networks should use
+    :class:`repro.kernels.conv2d_bitslice.network.HobflopsNetwork`,
+    which keeps the interior boundaries in the bitslice domain.
 
     Block sizes / ``c_unroll`` default to shape-derived values
     (:func:`derive_blocks`) and are exposed for autotuning
     (:func:`tune_conv_blocks`)."""
-    khh, kww, C, M = kernels.shape
-    patches = im2col(images, khh, kww, stride, padding)
-    B, Ho, Wo, K = patches.shape
-    pf = patches.reshape(B * Ho * Wo, K)
-    wf = kernels.reshape(K, M)
-
-    from repro.core import softfloat as sf
-    from repro.core.bitslice import unpack_planes
-    blk = derive_blocks(B * Ho * Wo, K, M, p_block=p_block,
-                        m_block=m_block, c_block=c_block,
-                        c_unroll=c_unroll)
-    i_masks, w_planes = encode_inputs(
-        pf, wf, fmt, rounding, p_block=blk["p_block"],
-        m_block=blk["m_block"], c_block=blk["c_block"])
-    if backend == "pallas":
-        out = bitslice_mac_pallas(i_masks, w_planes, fmt=fmt,
-                                  extended=extended, rounding=rounding,
-                                  interpret=interpret, **blk)
-    else:
-        out = _bitslice_mac_jnp(i_masks, w_planes, fmt=fmt,
-                                extended=extended, rounding=rounding,
-                                c_unroll=blk["c_unroll"])
-    fmt_out = fmt.mult_out(extended)
-    if relu:
-        out = hobflops_relu_planes(out, fmt_out)
-    codes = unpack_planes(out)
-    vals = sf.decode_jnp(codes, fmt_out)
-    return vals[:B * Ho * Wo, :M].reshape(B, Ho, Wo, M)
+    if not isinstance(kernels, ConvWeights):
+        kernels = encode_conv_weights(kernels, fmt, rounding)
+    assert kernels.fmt == fmt, (kernels.fmt, fmt)
+    act = encode_activations(images, fmt, rounding)
+    out = conv_core(act, kernels, stride=stride, padding=padding,
+                    extended=extended, rounding=rounding, relu=relu,
+                    backend=backend, interpret=interpret,
+                    p_block=p_block, m_block=m_block, c_block=c_block,
+                    c_unroll=c_unroll)
+    return decode_activations(out)
 
 
 def tune_conv_blocks(images, kernels, *, fmt: FPFormat,
@@ -143,16 +317,22 @@ def tune_conv_blocks(images, kernels, *, fmt: FPFormat,
     if candidates is None:
         candidates = [{"c_unroll": u, "m_block": m}
                       for u in (1, 2, 4, 8) for m in (8, 32, 128)]
-    khh, kww, C, M = kernels.shape
+    if isinstance(kernels, ConvWeights):
+        khh, kww, C, M = (kernels.kh, kernels.kw, kernels.cin,
+                          kernels.cout)
+    else:
+        khh, kww, C, M = kernels.shape
     B, H, W, _ = images.shape
+    # Resolve through the same clamping the launch will apply so
+    # equivalent candidates dedupe — with the exact strided Ho*Wo patch
+    # count, not the unstrided B*H*W (which could clamp differently).
+    Ho, Wo = conv_out_hw(H, W, khh, kww, conv_kw.get("stride", 1),
+                         conv_kw.get("padding", "SAME"))
     results: dict[tuple, float] = {}
     best, best_dt = None, float("inf")
     last_err = None
     for cand in candidates:
-        # Resolve through the same clamping the launch will apply so
-        # equivalent candidates dedupe (P is conservatively the
-        # unstrided patch count; exact P only shifts p_block clamping).
-        key = tuple(sorted(derive_blocks(B * H * W, khh * kww * C, M,
+        key = tuple(sorted(derive_blocks(B * Ho * Wo, khh * kww * C, M,
                                          **cand).items()))
         if key in results:
             continue

@@ -38,6 +38,19 @@ def test_pack_unpack_roundtrip_jnp(nbits, nwords):
     np.testing.assert_array_equal(back, codes)
 
 
+def test_pack_planes_pads_ragged_lane_dim():
+    """pack_planes zero-pads N to a lane-word multiple internally
+    (mirroring pack_planes_np) instead of asserting."""
+    import jax.numpy as jnp
+    rng = np.random.default_rng(3)
+    for n in (1, 31, 33, 50):
+        codes = rng.integers(0, 1 << 7, n).astype(np.int32)
+        planes = pack_planes(jnp.asarray(codes), 7)
+        assert planes.shape == (7, -(-n // 32))
+        back = np.asarray(unpack_planes(planes))[:n]
+        np.testing.assert_array_equal(back, codes)
+
+
 def test_jax_fn_matches_interpreter():
     import jax.numpy as jnp
     fmt = FPFormat(4, 3)

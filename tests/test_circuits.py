@@ -8,8 +8,8 @@ from repro.core import softfloat as sf
 from repro.core.bitslice import pack_planes_np, unpack_planes_np
 from repro.core.circuit import Graph
 from repro.core.codegen import eval_netlist
-from repro.core.fpcore import (build_add, build_mac, build_mac_chain,
-                               build_mul)
+from repro.core.fpcore import (build_add, build_cast, build_mac,
+                               build_mac_chain, build_mul)
 from repro.core.fpformat import RNE, RTZ, FPFormat
 from repro.core.opt import (CELL_LIBS, absorb_andn, const_prop,
                             lib_gate_count, optimize_mapped, sweep,
@@ -107,6 +107,50 @@ def test_gate_count_monotone_in_precision():
     g12 = build_mac(FPFormat(5, 6)).live_gate_count()
     g16 = build_mac(FPFormat(5, 10)).live_gate_count()
     assert g8 < g12 < g16
+
+
+# ---------------------------------------------------------------------------
+# Format cast (the bitslice-resident layer boundary)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("rounding", [RNE, RTZ])
+@pytest.mark.parametrize("fmt_in,fmt_out", [
+    (FPFormat(2, 1), FPFormat(2, 1)),      # identity
+    (FPFormat(2, 3), FPFormat(2, 1)),      # e2m1 mult_out -> storage
+    (FPFormat(3, 3), FPFormat(3, 2)),      # accumulator -> operand
+    (FPFormat(2, 1), FPFormat(3, 3)),      # widening (exact)
+    (FPFormat(4, 3), FPFormat(3, 2)),      # cross-w_e narrowing
+])
+def test_cast_exhaustive(fmt_in, fmt_out, rounding):
+    """build_cast == softfloat.fp_cast over EVERY canonical code, and
+    fp_cast == encode(decode(x)) (no double rounding: decode is exact in
+    f64), for small formats."""
+    xs = canonical_codes(fmt_in)
+    g = build_cast(fmt_in, fmt_out, rounding)
+    got = run_netlist(g, {"x": xs}, {"x": fmt_in.nbits})
+    want = sf.fp_cast(xs, fmt_in, fmt_out, rounding)
+    np.testing.assert_array_equal(got, want)
+    roundtrip = sf.encode(sf.decode(xs, fmt_in), fmt_out, rounding)
+    np.testing.assert_array_equal(want, roundtrip)
+
+
+@pytest.mark.parametrize("lib", ["tpu_vpu", "avx2", "neon", "avx512"])
+def test_cast_optimize_mapped_preserves_semantics(lib):
+    fmt_in, fmt_out = FPFormat(3, 3), FPFormat(3, 2)
+    xs = canonical_codes(fmt_in)
+    g = build_cast(fmt_in, fmt_out, RNE)
+    want = run_netlist(g, {"x": xs}, {"x": fmt_in.nbits})
+    opt = optimize_mapped(g, lib)
+    got = run_netlist(opt, {"x": xs}, {"x": fmt_in.nbits})
+    np.testing.assert_array_equal(got, want)
+
+
+def test_cast_is_cheap():
+    """The boundary cast must be small change next to a MAC — that is
+    the whole point of staying bitslice-resident."""
+    fmt = FPFormat(5, 3)                   # hobflops9
+    cast = build_cast(fmt.mult_out(), fmt).live_gate_count()
+    mac = build_mac(fmt).live_gate_count()
+    assert cast * 5 < mac, (cast, mac)
 
 
 # ---------------------------------------------------------------------------

@@ -169,6 +169,58 @@ def test_derive_blocks():
     assert blk["c_block"] % blk["c_unroll"] == 0
 
 
+def test_matmul_pre_encoded_weights():
+    """hobflops_matmul(w_planes=...) == hobflops_matmul(w_f32) — static
+    weights encoded once, bit-exact, including non-lane-multiple M."""
+    from repro.kernels.bitslice_mac.ops import encode_weight_planes
+    fmt = FPFormat(5, 3)
+    rng = np.random.default_rng(21)
+    P, C, M = 5, 12, 48
+    i, w = _rand(rng, (P, C)), _rand(rng, (C, M))
+    want = np.asarray(hobflops_matmul(i, w, fmt=fmt, backend="jnp"))
+    wp = encode_weight_planes(w, fmt)
+    got = np.asarray(hobflops_matmul(i, fmt=fmt, w_planes=wp, cout=M,
+                                     backend="jnp"))
+    np.testing.assert_array_equal(got, want)
+    got_p = np.asarray(hobflops_matmul(
+        i, fmt=fmt, w_planes=wp, cout=M, backend="pallas",
+        interpret=True, p_block=4, m_block=1, c_block=4))
+    np.testing.assert_array_equal(got_p, want)
+
+
+def test_conv2d_pre_encoded_weights():
+    """hobflops_conv2d accepts a ConvWeights in place of f32 kernels."""
+    from repro.kernels.conv2d_bitslice.ops import encode_conv_weights
+    fmt = FPFormat(5, 2)
+    rng = np.random.default_rng(22)
+    img = _rand(rng, (1, 5, 5, 4))
+    ker = _rand(rng, (3, 3, 4, 8), 0.4)
+    want = np.asarray(hobflops_conv2d(img, ker, fmt=fmt, relu=True,
+                                      backend="jnp"))
+    cw = encode_conv_weights(ker, fmt)
+    got = np.asarray(hobflops_conv2d(img, cw, fmt=fmt, relu=True,
+                                     backend="jnp"))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_tune_conv_blocks_dedupe_uses_strided_patch_count():
+    """Candidates that clamp to the same launch config for the *actual*
+    strided Ho*Wo patch count must dedupe to one timed entry (the seed
+    keyed on the unstrided B*H*W, splitting them)."""
+    from repro.kernels.conv2d_bitslice.ops import tune_conv_blocks
+    fmt = FPFormat(5, 2)
+    rng = np.random.default_rng(23)
+    img = _rand(rng, (1, 8, 8, 4))
+    ker = _rand(rng, (1, 1, 4, 32), 0.4)
+    # stride 2 -> P = 16; p_block 16 and 32 both clamp to 16.
+    best, results = tune_conv_blocks(
+        img, ker, fmt=fmt, stride=2, backend="jnp", iters=1,
+        candidates=[{"p_block": 16}, {"p_block": 32}])
+    assert len(results) == 1, results
+    (key,) = results
+    assert dict(key)["p_block"] == 16
+
+
 def test_hobflops_relu_is_bitwise():
     """ReLU in the bitslice domain == ReLU on decoded values."""
     import jax.numpy as jnp

@@ -30,6 +30,19 @@ def test_bench_json_writer(tmp_path):
         assert json.load(f) == results
 
 
+def test_network_bench_smoke():
+    """Tier-1 smoke of the multi-layer pipeline benchmark: a tiny
+    bitslice-resident stack runs, matches the per-layer roundtrip
+    bit-exactly, and yields the BENCH_network.json row layout."""
+    sys.path.insert(0, _ROOT)
+    from benchmarks.network import smoke
+    row = smoke()
+    for key in ("resident_macs_per_s", "roundtrip_macs_per_s",
+                "speedup_vs_roundtrip", "macs"):
+        assert key in row, row
+    assert row["macs"] > 0
+
+
 def test_gates_chain_table_shape():
     """chain_table reports gates/MAC per lib with the fields the
     acceptance trajectory tracks."""
