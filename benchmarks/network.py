@@ -26,6 +26,17 @@ depth-chained; channel width scaled for CPU wall-clock like
 All three produce bit-identical outputs (tests assert it).  Timing is
 best-of-reps, interleaved rep-by-rep, to reject scheduler noise on
 shared CPUs.
+
+A second workload, ``residual_pool``, exercises the graph runner
+(DESIGN.md §9): a residual block with in-domain max/avg pooling and a
+strided downsample, measured resident vs the per-layer f32-boundary
+oracle path (``NetworkGraph.run_roundtrip``) and emitted as the
+``residual_pool`` section of ``BENCH_network.json``.  Note the graph
+workload is only ~4 convs deep: the entry ``pack_planes`` cost the
+resident path pays once (the per-layer path never packs planes — its
+convs go straight from f32 to broadcast masks) is amortized over far
+fewer layers than in the 8-deep stack, so expect ~parity here on CPU
+versus the clear resident win on the deep stack.
 """
 from __future__ import annotations
 
@@ -36,11 +47,14 @@ import numpy as np
 
 from repro.core.fpformat import HOBFLOPS_FORMATS
 from repro.kernels.conv2d_bitslice.network import (ConvLayerSpec,
-                                                   HobflopsNetwork)
+                                                   HobflopsNetwork,
+                                                   NetworkGraph)
 from repro.kernels.conv2d_bitslice.ops import hobflops_conv2d
 
 # Workload: depth x (1x1, C->C) convs on a HW x HW feature map.
 HW_, C_, DEPTH_, KH_ = 14, 8, 8, 1
+# residual_pool workload: graph topology feature-map side / channels.
+G_HW_, G_C_ = 12, 8
 
 
 def _time_all(fns, iters: int = 20, reps: int = 8):
@@ -107,6 +121,49 @@ def bench_network(fmt_name: str, hw: int = HW_, c: int = C_,
     }
 
 
+def build_residual_pool(fmt_name: str, hw: int = G_HW_, c: int = G_C_,
+                        seed: int = 0):
+    """The graph-runner workload (DESIGN.md §9): 3x3 conv -> maxpool ->
+    residual pointwise block -> strided 3x3 downsample -> 2x2 avgpool
+    head.  Returns (images, NetworkGraph)."""
+    fmt = HOBFLOPS_FORMATS[fmt_name]
+    rng = np.random.default_rng(seed)
+    img = rng.standard_normal((1, hw, hw, c)).astype(np.float32)
+
+    def k(*shape, s=0.3):
+        return (rng.standard_normal(shape) * s).astype(np.float32)
+
+    g = NetworkGraph(fmt)
+    c1 = g.conv("c1", g.input_name, k(3, 3, c, c), relu=True)
+    p1 = g.maxpool2d("p1", c1, window=2)
+    c2 = g.conv("c2", p1, k(1, 1, c, c), relu=True)
+    c3 = g.conv("c3", c2, k(1, 1, c, c))
+    res = g.relu("r", g.add("res", c3, p1))
+    d = g.conv("d", res, k(3, 3, c, c), stride=2)
+    g.output(g.avgpool2d("head", d, window=2))
+    return img, g
+
+
+def bench_residual_pool(fmt_name: str, hw: int = G_HW_, c: int = G_C_,
+                        iters: int = 20, reps: int = 8,
+                        stack=None) -> dict:
+    """Resident vs per-layer-oracle MACs/s for the residual_pool graph
+    (in-domain pooling + residual adds vs f32 boundaries + word-parallel
+    softfloat pooling at every node)."""
+    img, g = stack or build_residual_pool(fmt_name, hw, c)
+    macs = g.macs(img.shape)
+    dt_res, dt_rt = _time_all([lambda: g.run(img),
+                               lambda: g.run_roundtrip(img)], iters, reps)
+    return {
+        "format": fmt_name, "hw": hw, "c": c, "macs": macs,
+        "resident_macs_per_s": macs / dt_res,
+        "roundtrip_macs_per_s": macs / dt_rt,
+        "resident_us_per_call": dt_res * 1e6,
+        "roundtrip_us_per_call": dt_rt * 1e6,
+        "speedup_vs_roundtrip": dt_rt / dt_res,
+    }
+
+
 def smoke(fmt_name: str = "hobflops8", hw: int = 6, c: int = 8,
           depth: int = 3) -> dict:
     """Tiny run for the tier-1 smoke test: builds the stack, checks the
@@ -118,8 +175,17 @@ def smoke(fmt_name: str = "hobflops8", hw: int = 6, c: int = 8,
     rt = np.asarray(net.run_roundtrip(img))
     assert res.shape == net.out_shape(img.shape), (res.shape, img.shape)
     assert (res == rt).all(), "resident != per-layer roundtrip"
-    return bench_network(fmt_name, hw, c, depth, iters=1, reps=1,
-                         stack=stack)
+    # the graph workload too: residual + pools, still bit-exact
+    gimg, g = build_residual_pool(fmt_name, hw=8, c=4)
+    gres = np.asarray(g.run(gimg))
+    assert (gres == np.asarray(g.run_roundtrip(gimg))).all(), \
+        "graph resident != per-layer oracle"
+    row = bench_network(fmt_name, hw, c, depth, iters=1, reps=1,
+                        stack=stack)
+    row["residual_pool"] = bench_residual_pool(fmt_name, hw=8, c=4,
+                                               iters=1, reps=1,
+                                               stack=(gimg, g))
+    return row
 
 
 def run(quick: bool = False):
@@ -128,7 +194,8 @@ def run(quick: bool = False):
     rows = ["impl,format,macs_per_s,us_per_call,speedup_vs_roundtrip"]
     results = {"workload": {"hw": HW_, "c": C_, "depth": DEPTH_,
                             "kh": KH_},
-               "formats": {}}
+               "residual_pool_workload": {"hw": G_HW_, "c": G_C_},
+               "formats": {}, "residual_pool": {}}
     for name in formats:
         r = bench_network(name)
         rows.append(f"network_resident,{name},"
@@ -143,6 +210,15 @@ def run(quick: bool = False):
                     f"{r['roundtrip_preencoded_us_per_call']:.1f},"
                     f"{r['roundtrip_preencoded_macs_per_s'] / r['roundtrip_macs_per_s']:.2f}")
         results["formats"][name] = r
+        gr = bench_residual_pool(name)
+        rows.append(f"residual_pool_resident,{name},"
+                    f"{gr['resident_macs_per_s']:.3e},"
+                    f"{gr['resident_us_per_call']:.1f},"
+                    f"{gr['speedup_vs_roundtrip']:.2f}")
+        rows.append(f"residual_pool_roundtrip,{name},"
+                    f"{gr['roundtrip_macs_per_s']:.3e},"
+                    f"{gr['roundtrip_us_per_call']:.1f},1.00")
+        results["residual_pool"][name] = gr
     return "\n".join(rows), results
 
 

@@ -21,7 +21,8 @@ from repro.core import softfloat as sf
 from repro.core.bitslice import pack_planes_np, unpack_planes_np
 from repro.core.codegen import eval_netlist
 from repro.core.fpcore import (build_add, build_cast, build_mac,
-                               build_mac_chain, build_mul)
+                               build_mac_chain, build_max, build_mul,
+                               build_scale)
 from repro.core.fpformat import (EXC_INF, EXC_NAN, EXC_NORMAL, EXC_ZERO, RNE,
                                  RTZ, FPFormat)
 
@@ -87,6 +88,48 @@ def check_cast(fmt_in, fmt_out, rounding):
     return True
 
 
+def check_max(fmt):
+    """Exhaustive pairs: build_max == softfloat.fp_max (the plane-domain
+    maxpool reduction)."""
+    xs = all_canonical_codes(fmt)
+    pairs_x = np.repeat(xs, len(xs))
+    pairs_y = np.tile(xs, len(xs))
+    g = build_max(fmt)
+    out = eval_netlist(g, {"x": pack_planes_np(pairs_x, fmt.nbits),
+                           "y": pack_planes_np(pairs_y, fmt.nbits)})["out"]
+    got = unpack_planes_np(out, len(pairs_x))
+    expect = sf.fp_max(pairs_x, pairs_y, fmt)
+    bad = got != expect
+    print(f"max {fmt}: {len(pairs_x)} pairs, {bad.sum()} mismatches, "
+          f"gates={g.live_gate_count()}")
+    if bad.any():
+        for i in np.nonzero(bad)[0][:10]:
+            print(f"  x={pairs_x[i]:x} ({sf.decode(pairs_x[i], fmt)}) "
+                  f"y={pairs_y[i]:x} ({sf.decode(pairs_y[i], fmt)}) "
+                  f"got={got[i]:x} want={expect[i]:x}")
+        return False
+    return True
+
+
+def check_scale(fmt, k):
+    """Exhaustive: build_scale == softfloat.fp_scale (the divider-free
+    avgpool tail, x * 2**-k)."""
+    xs = all_canonical_codes(fmt)
+    g = build_scale(fmt, k)
+    out = eval_netlist(g, {"x": pack_planes_np(xs, fmt.nbits)})["out"]
+    got = unpack_planes_np(out, len(xs))
+    expect = sf.fp_scale(xs, k, fmt)
+    bad = got != expect
+    print(f"scale {fmt} k={k}: {len(xs)} codes, {bad.sum()} mismatches, "
+          f"gates={g.live_gate_count()}")
+    if bad.any():
+        for i in np.nonzero(bad)[0][:10]:
+            print(f"  x={xs[i]:x} ({sf.decode(xs[i], fmt)}) "
+                  f"got={got[i]:x} want={expect[i]:x}")
+        return False
+    return True
+
+
 def check_chain(fmt_in, k, rounding=RNE, n=8192, seed=0):
     """Random-vector equivalence: build_mac_chain == k x build_mac."""
     fmt_out = fmt_in.mult_out()
@@ -125,6 +168,9 @@ def run_checks(quick: bool = False) -> bool:
     ok &= check_chain(f32, 2, RNE)
     # accumulator-format -> operand-format cast (the layer boundary)
     ok &= check_cast(f32.mult_out(), f32, RNE)
+    # graph-runner node netlists: maxpool reduction + avgpool scale
+    ok &= check_max(f32)
+    ok &= check_scale(f32, 2)
     if not quick:
         ok &= check(f32, f32.mult_out(True), RNE, "mul")
         ok &= check(f32, f32.mult_out(), RTZ, "mul")
@@ -135,6 +181,11 @@ def run_checks(quick: bool = False) -> bool:
         ok &= check_cast(f32.mult_out(), f32, RTZ)
         ok &= check_cast(FPFormat(5, 3).mult_out(), FPFormat(5, 2), RNE)
         ok &= check_cast(FPFormat(3, 2), FPFormat(4, 4), RNE)
+        ok &= check_max(FPFormat(4, 2))
+        ok &= check_max(FPFormat(5, 3).mult_out())  # accumulator-fmt pool
+        ok &= check_scale(FPFormat(4, 2), 1)
+        ok &= check_scale(FPFormat(5, 3).mult_out(), 3)
+        ok &= check_scale(f32, 0)
     return ok
 
 

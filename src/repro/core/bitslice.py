@@ -98,6 +98,53 @@ def unpack_planes(planes, lane_bits: int = 32):
     return codes.reshape(*codes.shape[:-2], -1)
 
 
+def window_gather_planes(planes, shape, kh: int, kw: int, stride: int = 1,
+                         pad_h: int = 0, pad_w: int = 0,
+                         fill_code: int = 0):
+    """Pool-window plane gather: stack kh x kw shifted views of a plane
+    array without leaving the bitslice domain.
+
+    ``planes`` is ``[nbits, P, Mw]`` (the activation carrier layout:
+    pixels along rows, channels along int32 lanes) and ``shape`` the
+    logical NHWC shape.  Because a pooling window combines *pixels* of
+    the *same* channel, and channels live in lanes, the gather is pure
+    row selection — every lane stays aligned.  Returns
+    ``([kh*kw, nbits, B*Ho*Wo, Mw] windows, (Ho, Wo))``; window
+    position (i, j) is entry ``i*kw + j``.
+
+    ``pad_h``/``pad_w`` add spatial padding (split low-half-first like
+    the im2col SAME convention) whose slots hold ``fill_code`` across
+    all lanes — +0 (the add identity) for average pools, -inf (the max
+    identity) for max pools.
+    """
+    assert jnp is not None
+    nb, P, Mw = planes.shape
+    B, H, W, C = shape
+    assert P >= B * H * W, (P, shape)
+    x = planes[:, :B * H * W, :].reshape(nb, B, H, W, Mw)
+    if pad_h or pad_w:
+        ph0, pw0 = pad_h // 2, pad_w // 2
+        x = jnp.pad(x, ((0, 0), (0, 0), (ph0, pad_h - ph0),
+                        (pw0, pad_w - pw0), (0, 0)))
+        if fill_code:
+            # Per-plane fill word: all 32 lanes carry bit b of the code.
+            fill = jnp.asarray([-((fill_code >> b) & 1) for b in range(nb)],
+                               jnp.int32)
+            interior = jnp.pad(jnp.ones((H, W), jnp.int32),
+                               ((ph0, pad_h - ph0), (pw0, pad_w - pw0)))
+            x = jnp.where(interior[None, None, :, :, None] == 0,
+                          fill[:, None, None, None, None], x)
+    Ho = (x.shape[2] - kh) // stride + 1
+    Wo = (x.shape[3] - kw) // stride + 1
+    wins = []
+    for i in range(kh):
+        for j in range(kw):
+            wins.append(x[:, :, i:i + (Ho - 1) * stride + 1:stride,
+                          j:j + (Wo - 1) * stride + 1:stride, :])
+    wins = jnp.stack(wins, axis=0)
+    return wins.reshape(kh * kw, nb, B * Ho * Wo, Mw), (Ho, Wo)
+
+
 # ---------------------------------------------------------------------------
 # Bitslice-resident activation carrier (the inter-layer HOBFLOPS tensor)
 # ---------------------------------------------------------------------------

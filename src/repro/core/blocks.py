@@ -98,6 +98,20 @@ def ult(g: Graph, a: list[int], b: list[int]) -> int:
     return borrow
 
 
+def ucmp(g: Graph, a: list[int], b: list[int]) -> tuple[int, int]:
+    """Unsigned (a < b, a > b) from one subtract chain + an equality
+    reduce — cheaper than two independent :func:`ult` subtracts when a
+    comparator needs both directions (the FP max swap logic)."""
+    lt = ult(g, a, b)
+    n = max(len(a), len(b))
+    eq = TRUE
+    for i in range(n):
+        ai = a[i] if i < len(a) else FALSE
+        bi = b[i] if i < len(b) else FALSE
+        eq = g.AND(eq, g.XNOR(ai, bi))
+    return lt, g.AND(g.NOT(lt), g.NOT(eq))
+
+
 def mux_bus(g: Graph, s: int, a: list[int], b: list[int]) -> list[int]:
     """s ? a : b, element-wise (buses padded with FALSE)."""
     n = max(len(a), len(b))

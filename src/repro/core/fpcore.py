@@ -255,6 +255,109 @@ def build_cast(fmt_in: FPFormat, fmt_out: FPFormat,
 
 
 # ---------------------------------------------------------------------------
+# Maximum: sign/magnitude FP compare-and-select (the maxpool reduction)
+# ---------------------------------------------------------------------------
+def max_val(g: Graph, xv: FPVal, yv: FPVal, fmt: FPFormat) -> FPVal:
+    """Unpacked-domain FP maximum: max(FPVal, FPVal) -> FPVal.
+
+    Gate-level twin of ``softfloat.fp_max``: total order
+    -inf < negatives < zeros < positives < +inf, NaN propagating (to
+    canonical +NaN), ``max(+0, -0) == +0``.  The datapath is one
+    unsigned compare (``blocks.ucmp``) over a magnitude key plus field
+    muxes — no rounding, the result is always one of the operands.
+
+    Garbage-safe like :func:`mul_val`/:func:`add_val`: the key gates
+    exp/frac by the ``normal`` flag and carries (normal, inf) as its top
+    bits, so garbage fields on non-normal values never decide a compare
+    against a different exception class, and every non-normal outcome is
+    selected by the flags alone.
+    """
+    # Magnitude key (LSB first): [frac, exp] gated by normal, then the
+    # level bits normal < inf (zero = 00, normal = 01, inf = 10).
+    key_x = ([g.AND(b, xv.normal) for b in xv.frac + xv.exp]
+             + [xv.normal, xv.inf])
+    key_y = ([g.AND(b, yv.normal) for b in yv.frac + yv.exp]
+             + [yv.normal, yv.inf])
+    mag_lt, mag_gt = B.ucmp(g, key_x, key_y)
+
+    # signs differ: the non-negative operand wins; same sign: larger
+    # magnitude wins when positive, smaller when negative.
+    sign_diff = g.XOR(xv.sign, yv.sign)
+    take_y = g.MUX(sign_diff, xv.sign, g.MUX(xv.sign, mag_gt, mag_lt))
+
+    nan = g.OR(xv.nan, yv.nan)
+    zero = g.AND(g.MUX(take_y, yv.zero, xv.zero), g.NOT(nan))
+    normal = g.AND(g.MUX(take_y, yv.normal, xv.normal), g.NOT(nan))
+    inf = g.AND(g.MUX(take_y, yv.inf, xv.inf), g.NOT(nan))
+    sign = g.AND(g.MUX(take_y, yv.sign, xv.sign), g.NOT(nan))
+    exp = B.mux_bus(g, take_y, yv.exp, xv.exp)
+    frac = B.mux_bus(g, take_y, yv.frac, xv.frac)
+    return FPVal(zero, normal, inf, nan, sign, exp, frac)
+
+
+def max_wires(g: Graph, x: list[int], y: list[int],
+              fmt: FPFormat) -> list[int]:
+    v = max_val(g, unpack_val(g, x, fmt), unpack_val(g, y, fmt), fmt)
+    return pack_val(g, v, fmt)
+
+
+def build_max(fmt: FPFormat) -> Graph:
+    """Combinational elementwise FP max (inputs ``x``/``y``, output
+    ``out``).  The plane-resident maxpool folds its window through this
+    netlist — one compare-select per window element, entirely in the
+    bitslice domain."""
+    g = Graph()
+    x = g.input_bus("x", fmt.nbits)
+    y = g.input_bus("y", fmt.nbits)
+    g.output_bus("out", max_wires(g, x, y, fmt))
+    return g
+
+
+# ---------------------------------------------------------------------------
+# Power-of-two scale: exponent decrement (the avgpool divider)
+# ---------------------------------------------------------------------------
+def scale_val(g: Graph, xv: FPVal, fmt: FPFormat, k: int) -> FPVal:
+    """Unpacked-domain multiply by 2**-k (k >= 0 static): a bare
+    exponent decrement, exact on the significand.  Underflow flushes to
+    +0 like :func:`cast_val`; zero/inf/NaN pass through.  Gate-level
+    twin of ``softfloat.fp_scale``; garbage-safe like the other FPVal
+    ops (the decremented exponent is only meaningful when ``normal``
+    survives, and non-normal outcomes come from the flags alone).
+    """
+    assert k >= 0, k
+    we = fmt.w_e
+    if k > fmt.emax:
+        # Every normal underflows (exp <= emax < k): flush them all to
+        # +0.  Without this branch const_bus would truncate k to w_e
+        # bits and scale by the wrong power.
+        zero = g.OR(xv.zero, xv.normal)
+        sign = g.AND(xv.sign, g.NOT(g.OR(xv.nan, xv.normal)))
+        return FPVal(zero, FALSE, xv.inf, xv.nan, sign,
+                     [FALSE] * we, xv.frac)
+    diff, borrow = B.ripple_sub(g, xv.exp, B.const_bus(g, k, we))
+    uf_zero = g.AND(xv.normal, borrow)
+    zero = g.OR(xv.zero, uf_zero)
+    normal = g.AND(xv.normal, g.NOT(borrow))
+    sign = g.AND(xv.sign, g.NOT(g.OR(xv.nan, uf_zero)))
+    return FPVal(zero, normal, xv.inf, xv.nan, sign, diff[:we], xv.frac)
+
+
+def scale_wires(g: Graph, x: list[int], fmt: FPFormat, k: int) -> list[int]:
+    v = scale_val(g, unpack_val(g, x, fmt), fmt, k)
+    return pack_val(g, v, fmt)
+
+
+def build_scale(fmt: FPFormat, k: int) -> Graph:
+    """Combinational multiply-by-2**-k (input ``x``, output ``out``).
+    With ``k = log2(window)`` this turns an average pool into add-tree +
+    scale with no divider — the plane-resident pipeline's avgpool tail."""
+    g = Graph()
+    x = g.input_bus("x", fmt.nbits)
+    g.output_bus("out", scale_wires(g, x, fmt, k))
+    return g
+
+
+# ---------------------------------------------------------------------------
 # Adder
 # ---------------------------------------------------------------------------
 def add_val(g: Graph, xv: FPVal, yv: FPVal, fmt: FPFormat,

@@ -390,6 +390,77 @@ def fp_cast(x, fmt_in: FPFormat, fmt_out: FPFormat, rounding: str = RNE,
     return pack(exc_out, sign, e_res, frac_r, fmt_out, xp)
 
 
+def fp_max(x, y, fmt: FPFormat, xp=np):
+    """FloPoCo-semantics FP maximum on code words.
+
+    Ordering: -inf < negative normals < zeros < positive normals < +inf,
+    with magnitudes compared as (exp, frac).  NaN propagates: if either
+    operand is NaN the result is the canonical +NaN code.  ``max(+0, -0)``
+    and ``max(-0, +0)`` are both +0 (a positive sign wins a sign
+    disagreement); ``max(-0, -0)`` is -0.  The result is always one of
+    the (canonical) operand codes, so no rounding occurs.  Gate-level
+    twin: ``fpcore.build_max`` (tests check exhaustive agreement).  This
+    is the maxpool reduction op of the plane-resident pipeline.
+    """
+    idt = _idt(xp)
+    exc_x, sx, ex, fx = unpack(x, fmt, xp)
+    exc_y, sy, ey, fy = unpack(y, fmt, xp)
+    x_norm = exc_x == EXC_NORMAL
+    y_norm = exc_y == EXC_NORMAL
+    # Magnitude key: (level, exp, frac); level 0=zero, 1=normal, 2=inf.
+    # Canonical non-normals carry zero exp/frac so the key is monotone.
+    lvl_x = xp.where(exc_x == EXC_INF, 2, xp.where(x_norm, 1, 0))
+    lvl_y = xp.where(exc_y == EXC_INF, 2, xp.where(y_norm, 1, 0))
+    shift = fmt.w_e + fmt.w_f
+    mag_x = (lvl_x.astype(idt) << shift) | xp.where(x_norm, (ex << fmt.w_f)
+                                                    | fx, 0)
+    mag_y = (lvl_y.astype(idt) << shift) | xp.where(y_norm, (ey << fmt.w_f)
+                                                    | fy, 0)
+    # signs differ: the non-negative operand wins; same sign: larger
+    # magnitude wins when positive, smaller when negative.
+    take_y = xp.where(sx != sy, sx == 1,
+                      xp.where(sx == 1, mag_y < mag_x, mag_x < mag_y))
+    out = xp.where(take_y, xp.asarray(y).astype(idt),
+                   xp.asarray(x).astype(idt))
+    nan = (exc_x == EXC_NAN) | (exc_y == EXC_NAN)
+    nan_code = int(pack(EXC_NAN, 0, 0, 0, fmt))
+    return xp.where(nan, nan_code, out)
+
+
+def fp_scale(x, k: int, fmt: FPFormat, xp=np):
+    """FloPoCo-semantics multiply by 2**-k (k >= 0 static) on code words.
+
+    Exact on the significand (a pure exponent decrement); underflow
+    flushes to +0 like the mul/cast datapaths; zero/inf/NaN pass
+    through.  Gate-level twin: ``fpcore.build_scale``.  With ``k =
+    log2(window)`` this is the divider-free final step of an average
+    pool (add-tree + scale).
+    """
+    assert k >= 0, k
+    exc, sign, exp, frac = unpack(x, fmt, xp)
+    e_res = exp - k
+    x_norm = exc == EXC_NORMAL
+    underflow = x_norm & (e_res < 0)
+    exc_out = xp.where(underflow, EXC_ZERO, exc)
+    sign = xp.where(underflow, 0, sign)           # flush is +0
+    e_res = xp.clip(e_res, 0, fmt.emax)
+    return pack(exc_out, sign, e_res, frac, fmt, xp)
+
+
+def fp_relu(x, fmt: FPFormat, xp=np):
+    """ReLU on code words: any code with the sign bit set — negative
+    normals, -0, -inf, and (non-canonical) negative NaN — becomes the
+    canonical +0 code; everything else passes through unchanged.
+    Canonical NaN carries sign 0 and therefore propagates.  This is the
+    word-parallel twin of ``conv2d_bitslice.ops.hobflops_relu_planes``
+    (one ANDN per plane); tests check exhaustive agreement.
+    """
+    idt = _idt(xp)
+    codes = xp.asarray(x).astype(idt)
+    sign = (codes >> fmt.sign_off) & 1
+    return xp.where(sign == 1, 0, codes)
+
+
 def fp_mac(x, y, acc, fmt_in: FPFormat, fmt_out: FPFormat,
            rounding: str = RNE, xp=np):
     """HOBFLOPS MAC semantics: round the product to fmt_out, then add to

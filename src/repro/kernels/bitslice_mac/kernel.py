@@ -33,9 +33,21 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.codegen import make_jax_fn
-from repro.core.fpcore import build_cast, build_mac_chain
+from repro.core.fpcore import (build_add, build_cast, build_mac_chain,
+                               build_max, build_scale)
 from repro.core.fpformat import RNE, FPFormat
 from repro.core.opt import optimize_mapped
+
+
+def _optimized_fn(graph, lib: str):
+    """Shared plumbing: map a freshly built netlist into ``lib`` cells,
+    run the post-mapping optimization passes (constant propagation,
+    remap iteration, dead-node sweep), and wrap it as a traceable fn.
+    Every ``*_netlist_fn`` below caches through this, so each
+    (builder, format, options) combination pays graph construction,
+    mapping, and register allocation exactly once per process."""
+    mapped = optimize_mapped(graph, lib)
+    return make_jax_fn(mapped), mapped
 
 
 @functools.lru_cache(maxsize=None)
@@ -46,9 +58,7 @@ def mac_chain_netlist_fn(fmt: FPFormat, k: int, extended: bool,
     The chain is bit-exact to ``k`` sequential MAC steps; the mapped
     netlist additionally goes through the post-mapping optimization
     passes (constant propagation, remap iteration, dead-node sweep)."""
-    g = build_mac_chain(fmt, k, extended, rounding)
-    mapped = optimize_mapped(g, lib)
-    return make_jax_fn(mapped), mapped
+    return _optimized_fn(build_mac_chain(fmt, k, extended, rounding), lib)
 
 
 @functools.lru_cache(maxsize=None)
@@ -60,9 +70,30 @@ def cast_netlist_fn(fmt_in: FPFormat, fmt_out: FPFormat, rounding: str,
     (DESIGN.md §8): applied once per plane array between layers, it
     replaces the whole unpack -> decode -> f32 -> encode -> repack
     round-trip with a few dozen bitwise ops."""
-    g = build_cast(fmt_in, fmt_out, rounding)
-    mapped = optimize_mapped(g, lib)
-    return make_jax_fn(mapped), mapped
+    return _optimized_fn(build_cast(fmt_in, fmt_out, rounding), lib)
+
+
+@functools.lru_cache(maxsize=None)
+def add_netlist_fn(fmt: FPFormat, rounding: str = RNE,
+                   lib: str = "tpu_vpu"):
+    """Optimized elementwise FP adder (``build_add``) as a traceable fn
+    — the residual-merge / avgpool-tree op of the graph runner
+    (DESIGN.md §9), applied plane-wise over two activation arrays."""
+    return _optimized_fn(build_add(fmt, rounding), lib)
+
+
+@functools.lru_cache(maxsize=None)
+def max_netlist_fn(fmt: FPFormat, lib: str = "tpu_vpu"):
+    """Optimized elementwise FP max (``build_max``) as a traceable fn —
+    the plane-domain maxpool reduction (DESIGN.md §9)."""
+    return _optimized_fn(build_max(fmt), lib)
+
+
+@functools.lru_cache(maxsize=None)
+def scale_netlist_fn(fmt: FPFormat, k: int, lib: str = "tpu_vpu"):
+    """Optimized multiply-by-2**-k (``build_scale``) as a traceable fn —
+    the divider-free avgpool tail (DESIGN.md §9)."""
+    return _optimized_fn(build_scale(fmt, k), lib)
 
 
 def _chain_kwargs(xw, yb, c_unroll: int):

@@ -35,10 +35,13 @@ import jax.numpy as jnp
 
 from repro.core import softfloat as sf
 from repro.core.bitslice import (BitsliceActivation, pack_planes,
-                                 unpack_planes)
-from repro.core.fpformat import RNE, FPFormat
-from repro.kernels.bitslice_mac.kernel import (bitslice_mac_pallas,
-                                               cast_netlist_fn)
+                                 unpack_planes, window_gather_planes)
+from repro.core.fpformat import EXC_INF, RNE, FPFormat
+from repro.kernels.bitslice_mac.kernel import (add_netlist_fn,
+                                               bitslice_mac_pallas,
+                                               cast_netlist_fn,
+                                               max_netlist_fn,
+                                               scale_netlist_fn)
 from repro.kernels.bitslice_mac.ops import (LANE, _bitslice_mac_jnp,
                                             _pad_to, encode_weight_planes)
 
@@ -82,8 +85,20 @@ def im2col(images, kh: int, kw: int, stride: int = 1,
 
 
 def hobflops_relu_planes(planes, fmt: FPFormat):
-    """OFM bit planes [NOUT, ...] -> ReLU'd planes: negative values
-    become the all-zero (+0, exc=00) code.  One ANDN per plane."""
+    """OFM bit planes [NOUT, ...] -> ReLU'd planes.  One ANDN per plane.
+
+    Semantics (pinned by an exhaustive test against the word-parallel
+    ``softfloat.fp_relu`` oracle): every code whose *sign bit* is set —
+    negative normals, -0, -inf, and any non-canonical sign-set NaN —
+    becomes the canonical all-zero +0 code (exc=00); every sign-clear
+    code passes through unchanged.  In particular -inf maps to +0 (not
+    to a saturated finite value), and NaN propagates iff it is the
+    canonical sign-clear NaN the datapaths emit.  This is the
+    ``max(x, +0)`` of the FloPoCo encoding up to the NaN convention:
+    a true FP max would also map sign-set NaN to NaN, but the datapaths
+    never produce one, so the 1-gate-per-plane mask is used instead of
+    a ~100-gate ``build_max`` against a +0 constant.
+    """
     sign = planes[fmt.sign_off]
     keep = ~sign
     return planes & keep[None]
@@ -197,6 +212,132 @@ def activation_patch_masks(act: BitsliceActivation, kh: int, kw: int,
     return pat.reshape(B * Ho * Wo, kh * kw * C, nb), (Ho, Wo)
 
 
+# ---------------------------------------------------------------------------
+# Plane-domain elementwise / pooling ops (the graph runner's node kinds)
+# ---------------------------------------------------------------------------
+def relu_activations(act: BitsliceActivation) -> BitsliceActivation:
+    """In-domain ReLU as a standalone graph node (one ANDN per plane;
+    see :func:`hobflops_relu_planes` for the pinned semantics)."""
+    return BitsliceActivation(hobflops_relu_planes(act.planes, act.fmt),
+                              act.fmt, act.shape)
+
+
+def _align_rows(a, b):
+    """Zero-pad the shorter of two plane arrays along the row axis so
+    elementwise netlists can combine activations whose P padding
+    differs (zero rows are the +0 code — identity for add, and beyond
+    every logical pixel for max)."""
+    P = max(a.shape[1], b.shape[1])
+    return _pad_to(a, P, 1), _pad_to(b, P, 1)
+
+
+def add_activations(a: BitsliceActivation, b: BitsliceActivation,
+                    fmt: FPFormat | None = None,
+                    rounding: str = RNE) -> BitsliceActivation:
+    """Elementwise FP add of two activations in the plane domain — the
+    residual-merge node.  Branches whose formats differ are first cast
+    (``cast_activations``, a no-op on matching formats) to ``fmt``,
+    which defaults to the first operand's format; the sum is computed
+    by the optimized ``build_add`` netlist at that format."""
+    assert a.shape == b.shape, (a.shape, b.shape)
+    tgt = fmt or a.fmt
+    a = cast_activations(a, tgt, rounding)
+    b = cast_activations(b, tgt, rounding)
+    pa, pb = _align_rows(a.planes, b.planes)
+    fn, _ = add_netlist_fn(tgt, rounding)
+    out = fn(x=pa, y=pb)["out"]
+    out = jnp.broadcast_to(out, (tgt.nbits,) + pa.shape[1:])
+    return BitsliceActivation(out, tgt, a.shape)
+
+
+def _fold_pairwise(items, combine):
+    """Balanced pairwise reduction (the 'add-tree' order); both the
+    resident plane path and the word-parallel oracle fold windows with
+    this exact shape, so they stay bit-identical even though FP add is
+    not associative."""
+    items = list(items)
+    while len(items) > 1:
+        nxt = [combine(items[i], items[i + 1])
+               for i in range(0, len(items) - 1, 2)]
+        if len(items) % 2:
+            nxt.append(items[-1])
+        items = nxt
+    return items[0]
+
+
+def _pool_geometry(act: BitsliceActivation, window, stride, padding):
+    kh, kw = (window, window) if isinstance(window, int) else window
+    stride = stride or kh
+    B, H, W, C = act.shape
+    pad_h, pad_w = _conv_pad(H, W, kh, kw, stride, padding)
+    return kh, kw, stride, pad_h, pad_w
+
+
+def neg_inf_code(fmt: FPFormat) -> int:
+    """The canonical -inf code word — the max identity, used to fill
+    SAME-padding slots of a plane-domain maxpool."""
+    return (1 << fmt.sign_off) | (EXC_INF << fmt.exc_off)
+
+
+def maxpool2d_activations(act: BitsliceActivation, window=2,
+                          stride: int | None = None,
+                          padding: str = "VALID") -> BitsliceActivation:
+    """Max pooling entirely inside the bitslice domain.
+
+    Windows are gathered by pure row selection
+    (:func:`~repro.core.bitslice.window_gather_planes`; channels stay
+    lane-packed) and folded pairwise through the optimized ``build_max``
+    netlist — FP compare/select with the :func:`softfloat.fp_max`
+    semantics (NaN propagates, -inf loses to everything).  SAME padding
+    fills with -inf, the max identity; ``stride`` defaults to the
+    window size (non-overlapping pooling)."""
+    kh, kw, stride, pad_h, pad_w = _pool_geometry(act, window, stride,
+                                                  padding)
+    wins, (Ho, Wo) = window_gather_planes(
+        act.planes, act.shape, kh, kw, stride, pad_h, pad_w,
+        fill_code=neg_inf_code(act.fmt))
+    fn, _ = max_netlist_fn(act.fmt)
+    nb = act.fmt.nbits
+
+    def combine(x, y):
+        return jnp.broadcast_to(fn(x=x, y=y)["out"], (nb,) + x.shape[1:])
+
+    out = _fold_pairwise(list(wins), combine)
+    B, _, _, C = act.shape
+    return BitsliceActivation(out, act.fmt, (B, Ho, Wo, C))
+
+
+def avgpool2d_activations(act: BitsliceActivation, window=2,
+                          stride: int | None = None,
+                          padding: str = "VALID",
+                          rounding: str = RNE) -> BitsliceActivation:
+    """Average pooling in the bitslice domain: a pairwise ``build_add``
+    tree over the window followed by one ``build_scale`` (multiply by
+    ``2**-log2(window area)``) — no divider anywhere, so the window
+    area must be a power of two.  SAME padding fills with +0 (the add
+    identity) and still divides by the full window area
+    (count-include-pad semantics); ``stride`` defaults to the window
+    size."""
+    kh, kw, stride, pad_h, pad_w = _pool_geometry(act, window, stride,
+                                                  padding)
+    area = kh * kw
+    assert area & (area - 1) == 0, \
+        f"avgpool window area must be a power of two, got {kh}x{kw}"
+    wins, (Ho, Wo) = window_gather_planes(
+        act.planes, act.shape, kh, kw, stride, pad_h, pad_w, fill_code=0)
+    fn, _ = add_netlist_fn(act.fmt, rounding)
+    nb = act.fmt.nbits
+
+    def combine(x, y):
+        return jnp.broadcast_to(fn(x=x, y=y)["out"], (nb,) + x.shape[1:])
+
+    summed = _fold_pairwise(list(wins), combine)
+    sfn, _ = scale_netlist_fn(act.fmt, area.bit_length() - 1)
+    out = jnp.broadcast_to(sfn(x=summed)["out"], summed.shape)
+    B, _, _, C = act.shape
+    return BitsliceActivation(out, act.fmt, (B, Ho, Wo, C))
+
+
 def derive_blocks(P: int, K: int, M: int, *, p_block: int | None = None,
                   m_block: int | None = None, c_block: int | None = None,
                   c_unroll: int | None = None) -> dict:
@@ -301,6 +442,14 @@ def hobflops_conv2d(images, kernels, *, fmt: FPFormat, stride: int = 1,
     return decode_activations(out)
 
 
+# Errors that mean "this block-size candidate cannot launch" (shape /
+# tiling asserts, Mosaic lowering limits, XLA runtime rejections).
+# Deliberately NOT BaseException: KeyboardInterrupt and SystemExit
+# propagate out of the sweep immediately.
+_LAUNCH_ERRORS = (ValueError, TypeError, AssertionError,
+                  NotImplementedError, IndexError, RuntimeError)
+
+
 def tune_conv_blocks(images, kernels, *, fmt: FPFormat,
                      backend: str = "jnp", interpret: bool = False,
                      candidates=None, iters: int = 2, **conv_kw):
@@ -312,7 +461,10 @@ def tune_conv_blocks(images, kernels, *, fmt: FPFormat,
     the derived defaults); by default a c_unroll x m_block cross sweep.
     ``results`` maps the *resolved* (post-clamp) parameter tuple to
     seconds/call — candidates that clamp to the same launch config are
-    timed once.  Raises if every candidate fails to launch.
+    timed once.  Only launch-relevant errors (``_LAUNCH_ERRORS``) mark
+    a candidate as failed — interrupts re-raise immediately — and if
+    every candidate fails the final ``RuntimeError`` names the last
+    failing candidate dict and its error.
     """
     if candidates is None:
         candidates = [{"c_unroll": u, "m_block": m}
@@ -330,7 +482,7 @@ def tune_conv_blocks(images, kernels, *, fmt: FPFormat,
                          conv_kw.get("padding", "SAME"))
     results: dict[tuple, float] = {}
     best, best_dt = None, float("inf")
-    last_err = None
+    last_err, last_cand = None, None
     for cand in candidates:
         key = tuple(sorted(derive_blocks(B * Ho * Wo, khh * kww * C, M,
                                          **cand).items()))
@@ -345,13 +497,15 @@ def tune_conv_blocks(images, kernels, *, fmt: FPFormat,
             for _ in range(iters):
                 run()
             dt = (time.perf_counter() - t0) / iters
-        except Exception as e:                      # unlaunchable combo
-            last_err = e
+        except _LAUNCH_ERRORS as e:                 # unlaunchable combo
+            last_err, last_cand = e, dict(cand)
             continue
         results[key] = dt
         if dt < best_dt:
             best, best_dt = dict(cand), dt
     if best is None:
         raise RuntimeError(
-            f"tune_conv_blocks: no candidate launched") from last_err
+            "tune_conv_blocks: no candidate launched; last failing "
+            f"candidate {last_cand!r} raised "
+            f"{type(last_err).__name__}: {last_err}") from last_err
     return best, results

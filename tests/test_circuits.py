@@ -9,7 +9,8 @@ from repro.core.bitslice import pack_planes_np, unpack_planes_np
 from repro.core.circuit import Graph
 from repro.core.codegen import eval_netlist
 from repro.core.fpcore import (build_add, build_cast, build_mac,
-                               build_mac_chain, build_mul)
+                               build_mac_chain, build_max, build_mul,
+                               build_scale)
 from repro.core.fpformat import RNE, RTZ, FPFormat
 from repro.core.opt import (CELL_LIBS, absorb_andn, const_prop,
                             lib_gate_count, optimize_mapped, sweep,
@@ -151,6 +152,77 @@ def test_cast_is_cheap():
     cast = build_cast(fmt.mult_out(), fmt).live_gate_count()
     mac = build_mac(fmt).live_gate_count()
     assert cast * 5 < mac, (cast, mac)
+
+
+# ---------------------------------------------------------------------------
+# Max / power-of-two scale (the graph runner's pooling netlists)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("fmt", [FPFormat(3, 2), FPFormat(4, 2),
+                                 FPFormat(3, 3)])
+def test_max_exhaustive(fmt):
+    """build_max == softfloat.fp_max over every canonical pair, and
+    fp_max == float max on the decoded values wherever neither operand
+    is NaN (the FP-semantics sanity anchor)."""
+    xs = canonical_codes(fmt)
+    X, Y = np.repeat(xs, len(xs)), np.tile(xs, len(xs))
+    g = build_max(fmt)
+    got = run_netlist(g, {"x": X, "y": Y},
+                      {"x": fmt.nbits, "y": fmt.nbits})
+    want = sf.fp_max(X, Y, fmt)
+    np.testing.assert_array_equal(got, want)
+    dx, dy = sf.decode(X, fmt), sf.decode(Y, fmt)
+    ok = ~(np.isnan(dx) | np.isnan(dy))
+    np.testing.assert_array_equal(sf.decode(want, fmt)[ok],
+                                  np.maximum(dx, dy)[ok])
+
+
+def test_max_nan_and_signed_zero():
+    fmt = FPFormat(3, 2)
+    nan = sf.pack(3, 0, 0, 0, fmt)
+    pz, nz = sf.pack(0, 0, 0, 0, fmt), sf.pack(0, 1, 0, 0, fmt)
+    one = sf.encode(1.0, fmt)
+    assert sf.fp_max(nan, one, fmt) == nan
+    assert sf.fp_max(one, nan, fmt) == nan
+    assert sf.fp_max(pz, nz, fmt) == pz
+    assert sf.fp_max(nz, pz, fmt) == pz
+    assert sf.fp_max(nz, nz, fmt) == nz
+
+
+@pytest.mark.parametrize("fmt,k", [
+    (FPFormat(3, 2), 0), (FPFormat(3, 2), 2), (FPFormat(4, 2), 1),
+    (FPFormat(3, 3), 3),
+    (FPFormat(2, 2), 4),    # k > emax: every normal must flush to +0
+    (FPFormat(2, 1), 9),    # k >> 2**w_e (would truncate in const_bus)
+])
+def test_scale_exhaustive(fmt, k):
+    """build_scale == softfloat.fp_scale over every canonical code, and
+    fp_scale == encode(decode(x) * 2**-k) (scaling is exact, so there
+    is no rounding to disagree on)."""
+    xs = canonical_codes(fmt)
+    g = build_scale(fmt, k)
+    got = run_netlist(g, {"x": xs}, {"x": fmt.nbits})
+    want = sf.fp_scale(xs, k, fmt)
+    np.testing.assert_array_equal(got, want)
+    roundtrip = sf.encode(sf.decode(xs, fmt) * 2.0 ** -k, fmt)
+    np.testing.assert_array_equal(want, roundtrip)
+
+
+@pytest.mark.parametrize("lib", ["tpu_vpu", "avx2", "neon", "avx512"])
+def test_max_scale_optimize_mapped_preserves_semantics(lib):
+    fmt = FPFormat(3, 3)
+    xs = canonical_codes(fmt)
+    X, Y = np.repeat(xs, len(xs)), np.tile(xs, len(xs))
+    gm = build_max(fmt)
+    want = run_netlist(gm, {"x": X, "y": Y},
+                       {"x": fmt.nbits, "y": fmt.nbits})
+    got = run_netlist(optimize_mapped(gm, lib), {"x": X, "y": Y},
+                      {"x": fmt.nbits, "y": fmt.nbits})
+    np.testing.assert_array_equal(got, want)
+    gs = build_scale(fmt, 2)
+    want = run_netlist(gs, {"x": xs}, {"x": fmt.nbits})
+    got = run_netlist(optimize_mapped(gs, lib), {"x": xs},
+                      {"x": fmt.nbits})
+    np.testing.assert_array_equal(got, want)
 
 
 # ---------------------------------------------------------------------------

@@ -107,21 +107,31 @@ def test_no_f32_at_interior_boundaries():
     net = HobflopsNetwork(specs)
     jaxpr = jax.make_jaxpr(lambda x: net._resident(x, net.weights))(img)
 
-    def count(jx, name):
-        n = 0
-        for e in jx.eqns:
-            if str(e.primitive) == name:
-                n += 1
-            for p in e.params.values():
-                for sub in (p if isinstance(p, (list, tuple)) else (p,)):
-                    inner = getattr(sub, "jaxpr", None)
-                    if inner is not None:
-                        n += count(getattr(inner, "jaxpr", inner), name)
-        return n
-
+    from conftest import count_primitives
     # one f32->i32 bitcast at encode + one i32->f32 at decode; the conv
     # cores and casts in between operate on int planes only.
-    assert count(jaxpr.jaxpr, "bitcast_convert_type") == 2
+    assert count_primitives(jaxpr.jaxpr, "bitcast_convert_type") == 2
+
+
+def test_resident_stride2_valid_bit_exact():
+    """stride=2 and padding=VALID through the *resident* pipeline (not
+    just the per-layer path): bit-exact to the roundtrip oracle, and
+    the strided net still has exactly one encode + one decode."""
+    fmt = FPFormat(5, 2)
+    rng = np.random.default_rng(20)
+    img = _rand(rng, (2, 9, 9, 4))
+    specs = [ConvLayerSpec(_rand(rng, (3, 3, 4, 8), 0.4), fmt,
+                           stride=2, padding="VALID", relu=True),
+             ConvLayerSpec(_rand(rng, (3, 3, 8, 8), 0.4), fmt,
+                           stride=2, padding="VALID", relu=False)]
+    net = HobflopsNetwork(specs)
+    res = np.asarray(net(img))
+    assert res.shape == net.out_shape(img.shape) == (2, 1, 1, 8)
+    np.testing.assert_array_equal(res, np.asarray(net.run_roundtrip(img)))
+
+    from conftest import count_primitives
+    jaxpr = jax.make_jaxpr(lambda x: net._resident(x, net.weights))(img)
+    assert count_primitives(jaxpr.jaxpr, "bitcast_convert_type") == 2
 
 
 def test_cast_activations_matches_oracle():
