@@ -5,6 +5,8 @@
   conv       — CNN convolution layer in HOBFLOPS (paper §3.4/§4)
   network    — multi-layer stack: bitslice-resident pipeline vs
                per-layer decode/re-encode (paper §3.4, DESIGN.md §8)
+  serve      — lane-batched serving engine: wave throughput vs batch
+               bucket vs the one-request-at-a-time loop (DESIGN.md §10)
   roofline   — assembled dry-run roofline table (§Roofline), if
                experiments/dryrun has been populated
 
@@ -22,7 +24,7 @@ import json
 import os
 import time
 
-_JSON_SECTIONS = ("gates", "macs", "network")
+_JSON_SECTIONS = ("gates", "macs", "network", "serve")
 
 
 def _write_json(out_dir: str, section: str, results) -> str:
@@ -38,12 +40,13 @@ def main(argv=None):
     ap.add_argument("--quick", action="store_true",
                     help="small format subset (CI-speed)")
     ap.add_argument("--only", default=None,
-                    help="comma list: gates,macs,conv,network,roofline")
+                    help="comma list: gates,macs,conv,network,serve,roofline")
     ap.add_argument("--out-dir", default=".",
                     help="directory for BENCH_<section>.json files")
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
-    sections = [s for s in ("gates", "macs", "conv", "network", "roofline")
+    sections = [s for s in ("gates", "macs", "conv", "network", "serve",
+                            "roofline")
                 if only is None or s in only]
 
     for sec in sections:
@@ -62,6 +65,9 @@ def main(argv=None):
             elif sec == "network":
                 from benchmarks import network
                 text, results = network.run(quick=args.quick)
+            elif sec == "serve":
+                from benchmarks import serve
+                text, results = serve.run(quick=args.quick)
             else:
                 from benchmarks import roofline
                 text, results = roofline.run(quick=args.quick)

@@ -1,0 +1,167 @@
+"""Lane-batched serving benchmark: wave throughput vs batch size vs the
+one-request-at-a-time loop (DESIGN.md §10).
+
+The carrier's pixel-row axis is the batch axis, so a wave of N images
+runs through one compiled resident call whose fixed costs (dispatch,
+one encode/decode, per-netlist op issue) are batch-invariant until the
+plane arrays saturate the machine — serving cost per image falls with
+occupancy.  This benchmark measures exactly that: for each batch
+bucket B, a :class:`ConvServeEngine` serves B queued single-image
+requests as one wave, against the baseline of B sequential
+``graph.run`` calls on one image each (what callers paid before the
+engine existed).  The engine path is timed end-to-end including its
+host-side pack/unpack — the honest serving cost.
+
+Emits ``BENCH_serve.json``: per format, the single-request baseline
+and per-bucket wave timings with images/s, MACs/s, and the speedup vs
+the one-at-a-time loop.  The acceptance trajectory expects throughput
+to increase with bucket size, ≥2x at the largest bucket on hobflops8.
+
+Autotuned launch blocks come through the ``tuned_conv_blocks`` disk
+cache (``serve_conv/cache.py``), so repeat benchmark runs skip the
+sweep; override the cache path with ``HOBFLOPS_TUNE_CACHE``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.network import _time_all
+from repro.core.fpformat import HOBFLOPS_FORMATS
+from repro.kernels.conv2d_bitslice.network import NetworkGraph
+from repro.serve_conv import (ConvRequest, ConvServeEngine, RunnerCache,
+                              tuned_conv_blocks)
+
+# Serving workload: 3x3 conv -> pointwise conv -> 2x2 maxpool on a
+# HW x HW x C image.  Small on purpose: per-image marginal cost is the
+# fused gate-eval compute (scales with B*H*W rows), while the per-wave
+# fixed cost (call dispatch, per-op launch, encode/decode) is
+# batch-invariant — the request-batching regime the lane packer
+# targets, analogous to small-image high-QPS traffic on a wide
+# machine.  Larger images shift the balance toward marginal compute
+# and the batching win shrinks toward 1x (see BENCH_network.json for
+# the compute-bound trajectory).
+HW_, C_ = 4, 4
+BUCKETS = (1, 2, 4, 8, 16)
+
+
+def build_serve_graph(fmt_name: str, hw: int = HW_, c: int = C_,
+                      seed: int = 0, blocks: dict | None = None):
+    """Returns (single [1,hw,hw,c] image, request rng, NetworkGraph).
+    ``blocks`` pins tuned launch parameters on both conv nodes (the
+    runners thread them into the kernel launch)."""
+    fmt = HOBFLOPS_FORMATS[fmt_name]
+    rng = np.random.default_rng(seed)
+    g = NetworkGraph(fmt)
+    c1 = g.conv("c1", g.input_name,
+                (rng.standard_normal((3, 3, c, c)) * 0.3)
+                .astype(np.float32), relu=True, blocks=blocks)
+    c2 = g.conv("c2", c1,
+                (rng.standard_normal((1, 1, c, c)) * 0.3)
+                .astype(np.float32), relu=True, blocks=blocks)
+    g.output(g.maxpool2d("head", c2, window=2))
+    img = rng.standard_normal((1, hw, hw, c)).astype(np.float32)
+    return img, rng, g
+
+
+def bench_serve(fmt_name: str, hw: int = HW_, c: int = C_,
+                buckets=BUCKETS, iters: int = 10, reps: int = 5,
+                tune_path: str | None = None) -> dict:
+    img, _, g0 = build_serve_graph(fmt_name, hw, c)
+    blocks, _ = tuned_conv_blocks(
+        img, g0._weights["c1"], fmt=HOBFLOPS_FORMATS[fmt_name],
+        candidates=[{"c_unroll": 4, "m_block": m} for m in (8, 128)],
+        iters=1, path=tune_path)
+    # rebuild with the tuned blocks pinned on the conv nodes, so the
+    # timed waves actually execute the tuned configuration
+    img, rng, g = build_serve_graph(fmt_name, hw, c, blocks=blocks)
+    macs = g.macs(img.shape)
+
+    cache = RunnerCache()
+    images = {b: [rng.standard_normal((hw, hw, c)).astype(np.float32)
+                  for _ in range(b)] for b in buckets}
+    engines = {b: ConvServeEngine(g, (hw, hw, c), max_batch=b,
+                                  blocks=blocks, runner_cache=cache)
+               for b in buckets}
+
+    def serve(b):
+        eng = engines[b]
+        for i, im in enumerate(images[b]):
+            eng.submit(ConvRequest(i, im))
+        return eng.run()[-1].out
+
+    largest = max(buckets)
+
+    def single_loop():
+        out = None
+        for im in images[largest]:
+            out = g.run(im[None])
+        return out
+
+    # One interleaved timing set: every bucket's wave AND the shared
+    # one-request-at-a-time baseline ride the same reps, so machine
+    # drift hits all contenders equally and the per-bucket throughput
+    # trend is comparable (a per-bucket baseline re-measure showed 2x
+    # cross-bucket drift on shared CPUs).
+    fns = [lambda b=b: serve(b) for b in buckets] + [single_loop]
+    times = _time_all(fns, iters, reps)
+    dt_single = times[-1] / largest            # per image, one per call
+    results = {}
+    for b, dt_wave in zip(buckets, times):
+        results[str(b)] = {
+            "bucket": b,
+            "wave_us": dt_wave * 1e6,
+            "wave_images_per_s": b / dt_wave,
+            "wave_macs_per_s": b * macs / dt_wave,
+            "speedup_vs_single": b * dt_single / dt_wave,
+            "occupancy": engines[b].stats()["mean_occupancy"],
+        }
+    return {"format": fmt_name, "hw": hw, "c": c,
+            "macs_per_image": macs, "blocks": blocks,
+            "single_us_per_image": dt_single * 1e6,
+            "single_images_per_s": 1.0 / dt_single,
+            "single_macs_per_s": macs / dt_single,
+            "buckets": results}
+
+
+def smoke(fmt_name: str = "hobflops8", hw: int = 6, c: int = 4) -> dict:
+    """Tier-1 smoke: a tiny graph serves 5 queued requests across a
+    ragged wave split and every output is bit-identical to the
+    per-request ``graph.run``."""
+    img, rng, g = build_serve_graph(fmt_name, hw, c)
+    eng = ConvServeEngine(g, (hw, hw, c), max_batch=4)
+    reqs = [ConvRequest(i, rng.standard_normal((hw, hw, c))
+                        .astype(np.float32)) for i in range(5)]
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run()
+    assert len(done) == 5 and eng.waves == 2     # 4 + ragged 1
+    for r in done:
+        solo = np.asarray(g.run(r.image[None]))[0]
+        assert (r.out == solo).all(), f"request {r.rid} not bit-exact"
+    st = eng.stats()
+    assert st["images_served"] == 5
+    return st
+
+
+def run(quick: bool = False):
+    formats = ["hobflops8", "hobflops9"]
+    buckets = BUCKETS if not quick else (1, 2, 4, 8)
+    iters, reps = (4, 3) if quick else (10, 5)
+    rows = ["format,bucket,wave_images_per_s,single_images_per_s,"
+            "speedup_vs_single"]
+    results = {"workload": {"hw": HW_, "c": C_, "buckets": list(buckets)},
+               "formats": {}}
+    for name in formats:
+        r = bench_serve(name, buckets=buckets, iters=iters, reps=reps)
+        results["formats"][name] = r
+        for b in buckets:
+            rb = r["buckets"][str(b)]
+            rows.append(f"{name},{b},{rb['wave_images_per_s']:.1f},"
+                        f"{r['single_images_per_s']:.1f},"
+                        f"{rb['speedup_vs_single']:.2f}")
+    return "\n".join(rows), results
+
+
+if __name__ == "__main__":
+    text, _ = run()
+    print(text)

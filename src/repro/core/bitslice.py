@@ -203,6 +203,51 @@ class BitsliceActivation:
         return cls(children[0], fmt, shape)
 
 
+def stack_activations(acts):
+    """Coalesce per-request activations into one wave-batched carrier.
+
+    All activations must share the spatial/channel geometry ``(H, W, C)``
+    and the format; batch counts may differ (heterogeneous requests).
+    Because the carrier's row axis is ``B*H*W`` — the batch lives in
+    *rows*, channels in int32 lanes — stacking is pure row
+    concatenation: each input is trimmed to its logical ``n_pixels``
+    rows (dropping per-activation block padding, which holds only the
+    +0 code) and the slabs are joined in order.  The result decodes to
+    the row-wise concatenation of the inputs, bit-exactly.
+    """
+    assert jnp is not None
+    assert acts, "stack_activations: need at least one activation"
+    fmt = acts[0].fmt
+    _, H, W, C = acts[0].shape
+    for a in acts:
+        assert a.fmt == fmt, (a.fmt, fmt)
+        assert a.shape[1:] == (H, W, C), (a.shape, (H, W, C))
+    planes = jnp.concatenate([a.planes[:, :a.n_pixels, :] for a in acts],
+                             axis=1)
+    B = sum(a.shape[0] for a in acts)
+    return BitsliceActivation(planes, fmt, (B, H, W, C))
+
+
+def split_activation(act: BitsliceActivation, batch_sizes):
+    """Slice a wave-batched activation back into per-request carriers.
+
+    ``batch_sizes`` are per-request image counts summing to at most the
+    wave batch (trailing slack is pad).  The inverse of
+    :func:`stack_activations` up to row padding: slicing rows
+    ``[off : off + b*H*W]`` recovers exactly the codes each request
+    contributed, so round-tripping is bit-exact.
+    """
+    _, H, W, C = act.shape
+    rows = H * W
+    assert sum(batch_sizes) <= act.shape[0], (batch_sizes, act.shape)
+    out, off = [], 0
+    for b in batch_sizes:
+        out.append(BitsliceActivation(
+            act.planes[:, off:off + b * rows, :], act.fmt, (b, H, W, C)))
+        off += b * rows
+    return out
+
+
 if _tree_util is not None:  # pragma: no branch
     _tree_util.register_pytree_node(
         BitsliceActivation,

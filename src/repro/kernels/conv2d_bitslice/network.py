@@ -43,6 +43,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import hashlib
 from typing import Sequence
 
 import jax
@@ -75,7 +76,10 @@ class GraphNode:
     a static jit argument, so topology and per-node formats are
     compile-time structure).  ``precision`` is the operand format for
     ``conv``, the target format for ``cast``/``add`` (None on ``add``
-    means "first input's format"), and unused elsewhere."""
+    means "first input's format"), and unused elsewhere.  ``blocks``
+    holds conv launch-parameter overrides (p_block/m_block/c_block/
+    c_unroll, e.g. a ``tune_conv_blocks`` winner) as a sorted item
+    tuple; empty means the shape-derived defaults."""
     name: str
     kind: str
     inputs: tuple[str, ...] = ()
@@ -86,6 +90,7 @@ class GraphNode:
     extended: bool = False
     rounding: str = RNE
     window: tuple[int, int] = (2, 2)
+    blocks: tuple = ()
 
 
 class GraphValidationError(ValueError):
@@ -132,7 +137,8 @@ def _exec_resident(images, weights, *, nodes, out_name, input_fmt,
             out = conv_core(x, weights[nd.name], stride=nd.stride,
                             padding=nd.padding, extended=nd.extended,
                             rounding=nd.rounding, relu=nd.relu,
-                            backend=backend, interpret=interpret)
+                            backend=backend, interpret=interpret,
+                            **dict(nd.blocks))
         elif nd.kind == "cast":
             out = cast_activations(x, nd.precision, nd.rounding)
         elif nd.kind == "relu":
@@ -212,7 +218,7 @@ def _exec_roundtrip(images, weights, *, nodes, out_name, input_fmt,
                                   stride=nd.stride, padding=nd.padding,
                                   relu=nd.relu, extended=nd.extended,
                                   rounding=nd.rounding, backend=backend,
-                                  interpret=interpret)
+                                  interpret=interpret, **dict(nd.blocks))
         elif nd.kind == "cast":
             codes = sf.encode_jnp(x, nd.precision, nd.rounding)
             out = sf.decode_jnp(codes, nd.precision)
@@ -285,12 +291,23 @@ class NetworkGraph:
 
     def conv(self, name: str, src: str, kernels, fmt: FPFormat | None = None,
              *, stride: int = 1, padding: str = "SAME", relu: bool = False,
-             extended: bool = False, rounding: str = RNE) -> str:
+             extended: bool = False, rounding: str = RNE,
+             blocks: dict | None = None) -> str:
         """Conv node: ``precision``/``fmt`` is the operand format (the
         graph input format by default); output carries the accumulator
         format ``fmt.mult_out(extended)``.  ``kernels`` is f32
-        ``[kh, kw, cin, cout]`` or a pre-encoded :class:`ConvWeights`."""
+        ``[kh, kw, cin, cout]`` or a pre-encoded :class:`ConvWeights`.
+        ``blocks`` optionally pins launch parameters (p_block/m_block/
+        c_block/c_unroll — e.g. a ``tune_conv_blocks`` winner) for this
+        node's kernel launch; both runners thread them through, so a
+        tuned serving graph actually executes its tuned configuration."""
         fmt = fmt or self.input_fmt
+        if blocks:
+            bad = set(blocks) - {"p_block", "m_block", "c_block",
+                                 "c_unroll"}
+            if bad:
+                raise GraphValidationError(
+                    f"conv {name!r}: unknown launch block keys {bad}")
         if isinstance(kernels, ConvWeights):
             w = kernels
             if w.fmt != fmt:
@@ -303,7 +320,9 @@ class NetworkGraph:
         nm = self._insert(GraphNode(name, "conv", (src,), fmt,
                                     stride=stride, padding=padding,
                                     relu=relu, extended=extended,
-                                    rounding=rounding))
+                                    rounding=rounding,
+                                    blocks=tuple(sorted(
+                                        (blocks or {}).items()))))
         self._weights[name] = w
         return nm
 
@@ -364,6 +383,7 @@ class NetworkGraph:
                     stack.append(src)
         nodes = tuple(nd for nd in self._nodes.values()
                       if nd.name in live)
+        self._live_nodes = nodes
         self._live_weights = {k: w for k, w in self._weights.items()
                               if k in live}
         static = dict(nodes=nodes, out_name=name,
@@ -453,6 +473,77 @@ class NetworkGraph:
     def out_shape(self, in_shape) -> tuple[int, int, int, int]:
         assert self._out is not None, "call output() first"
         return self.shape_plan(in_shape)[self._out]
+
+    def signature(self) -> str:
+        """Stable hash of the graph's *compiled structure*: topology,
+        per-node static config, input format, backend, and conv weight
+        geometry + format — but NOT weight values, which are runtime
+        arguments to the compiled runner.  Graphs with equal signatures
+        compile to interchangeable runners; the serve-side
+        compiled-runner cache keys on this (it recomputes per wave, so
+        the digest is memoized once the graph is frozen).  On a frozen
+        graph only the *live* (output-ancestor) nodes are hashed —
+        pruned dead branches are not part of the compiled runner, so
+        they must not perturb the signature."""
+        if self._out is not None and getattr(self, "_sig", None):
+            return self._sig
+        parts = [repr((self.input_fmt, self.backend, self.interpret,
+                       self._out))]
+        nodes = self._live_nodes if self._out is not None \
+            else tuple(self._nodes.values())
+        for nd in nodes:
+            parts.append(repr(dataclasses.astuple(nd)))
+            w = self._weights.get(nd.name)
+            if w is not None:
+                parts.append(repr((w.kh, w.kw, w.cin, w.cout, w.fmt)))
+        sig = hashlib.sha256("\n".join(parts).encode()).hexdigest()[:16]
+        if self._out is not None:
+            self._sig = sig
+        return sig
+
+    def summary(self, in_shape) -> str:
+        """Per-node table (name, op, output format, output shape, MACs)
+        for a concrete input shape — the serve engine's startup log and
+        the examples' verbose output.  Nodes appear in insertion order;
+        the trailing row totals the conv MACs of one forward pass."""
+        shapes = self.shape_plan(in_shape)
+        fmts = self.format_plan()
+
+        def fstr(f: FPFormat) -> str:
+            return f"e{f.w_e}f{f.w_f}/{f.nbits}b"
+
+        rows = [("node", "op", "format", "out shape", "MACs")]
+        total = 0
+        for nd in self._nodes.values():
+            macs = 0
+            if nd.kind == "conv":
+                w = self._weights[nd.name]
+                B, Ho, Wo, _ = shapes[nd.name]
+                macs = B * Ho * Wo * w.kh * w.kw * w.cin * w.cout
+            total += macs
+            rows.append((nd.name, nd.kind, fstr(fmts[nd.name]),
+                         "x".join(str(d) for d in shapes[nd.name]),
+                         f"{macs:,}" if macs else "-"))
+        rows.append(("total", "", "", "", f"{total:,}"))
+        widths = [max(len(r[i]) for r in rows) for i in range(5)]
+        lines = []
+        for i, r in enumerate(rows):
+            lines.append("  ".join(c.ljust(w)
+                                   for c, w in zip(r, widths)).rstrip())
+            if i == 0:
+                lines.append("-" * len(lines[0]))
+        return "\n".join(lines)
+
+    def resident_runner(self):
+        """The compiled bitslice-resident entrypoint as a bare batched
+        callable ``images [B,H,W,C] f32 -> [B,Ho,Wo,M] f32`` with the
+        live weights closed over and no per-call host-side shape
+        re-validation.  The wave-serving engine validates a batch
+        bucket's shape once (``shape_plan``) when the bucket is first
+        seen, then drives waves through this."""
+        assert self._out is not None, "call output() first"
+        fn, weights = self._resident_fn, self._live_weights
+        return lambda images: fn(images, weights)
 
     def macs(self, in_shape) -> int:
         """Total conv multiply-accumulates for one forward pass."""

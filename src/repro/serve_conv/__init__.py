@@ -1,0 +1,29 @@
+"""Lane-batched serving of HOBFLOPS CNN graphs (DESIGN.md §10).
+
+The bitslice carrier's pixel-row axis is the batch axis, so concurrent
+requests pack into one wave that pays a single encode/decode and keeps
+the paper's "very wide vectorized" datapath full.  Pieces:
+
+* ``lanes``    — wave packer/unpacker with per-request slot bookkeeping
+* ``engine``   — :class:`ConvServeEngine`: queue, wave admission,
+                 batch buckets, throughput/latency/occupancy counters
+* ``cache``    — compiled-runner cache + ``tune_conv_blocks`` disk
+                 persistence
+* ``sharding`` — optional multi-device wave sharding over a 1-D mesh
+"""
+from repro.serve_conv.cache import (RunnerCache, bucket_for, bucket_sizes,
+                                    load_tune_cache, save_tune_cache,
+                                    tune_cache_path, tuned_conv_blocks)
+from repro.serve_conv.engine import (ConvRequest, ConvServeEngine,
+                                     derive_max_batch)
+from repro.serve_conv.lanes import (WavePlan, WaveSlot, pack_wave,
+                                    request_images, unpack_wave)
+from repro.serve_conv.sharding import wave_mesh, wave_sharded_runner
+
+__all__ = [
+    "ConvRequest", "ConvServeEngine", "RunnerCache", "WavePlan",
+    "WaveSlot", "bucket_for", "bucket_sizes", "derive_max_batch",
+    "load_tune_cache", "pack_wave", "request_images", "save_tune_cache",
+    "tune_cache_path", "tuned_conv_blocks", "unpack_wave", "wave_mesh",
+    "wave_sharded_runner",
+]

@@ -1,0 +1,190 @@
+"""Compilation and autotune caches for the lane-batched serve engine.
+
+Two cold-start costs dominate a fresh HOBFLOPS serving process: jit
+compilation of the resident graph runner (one XLA program per input
+shape) and the ``tune_conv_blocks`` sweep (dozens of end-to-end timed
+launches).  Both are pure functions of static structure, so both cache:
+
+* :class:`RunnerCache` — compiled wave runners keyed by
+  ``(graph signature, input HxWxC, batch bucket, precision plan)``.
+  Wave sizes are rounded up to power-of-two *buckets* (1/2/4/...), so a
+  handful of compilations serves every traffic mix; the tail of a
+  ragged final wave rides as zero-image pad instead of forcing a fresh
+  shape.  Entries hold the graph's bare compiled entrypoint
+  (``NetworkGraph.resident_runner``), with the bucket's shape validated
+  through ``shape_plan`` exactly once, on miss.
+* Tune persistence — ``tuned_conv_blocks`` wraps ``tune_conv_blocks``
+  with a JSON disk cache keyed by the problem signature (shapes,
+  kernel geometry, format, stride/padding, backend), so repeat
+  processes skip the sweep entirely.  The path defaults to
+  ``.hobflops_tune.json`` in the working directory and is overridden
+  by the ``HOBFLOPS_TUNE_CACHE`` environment variable or an explicit
+  argument.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+from repro.kernels.conv2d_bitslice.network import NetworkGraph
+from repro.kernels.conv2d_bitslice.ops import ConvWeights, tune_conv_blocks
+
+TUNE_CACHE_ENV = "HOBFLOPS_TUNE_CACHE"
+_TUNE_CACHE_DEFAULT = ".hobflops_tune.json"
+
+
+# ---------------------------------------------------------------------------
+# Batch buckets
+# ---------------------------------------------------------------------------
+def bucket_sizes(max_batch: int) -> tuple[int, ...]:
+    """The power-of-two bucket ladder up to and including
+    ``max_batch`` (itself appended if not a power of two)."""
+    assert max_batch >= 1
+    sizes = []
+    b = 1
+    while b < max_batch:
+        sizes.append(b)
+        b *= 2
+    sizes.append(max_batch)
+    return tuple(sizes)
+
+
+def bucket_for(n: int, buckets) -> int:
+    """Smallest bucket holding ``n`` images."""
+    for b in buckets:
+        if n <= b:
+            return b
+    raise ValueError(f"{n} images exceed the largest bucket "
+                     f"{max(buckets)}")
+
+
+# ---------------------------------------------------------------------------
+# Compiled-runner cache
+# ---------------------------------------------------------------------------
+class RunnerCache:
+    """Wave runners keyed by (graph signature, HxWxC, bucket,
+    precision plan).
+
+    The jit cache inside jax already memoizes per shape; this layer
+    exists to (a) make the compilation *policy* explicit — only bucket
+    shapes ever reach jit, so the program count is bounded by the
+    bucket ladder — and (b) count hits/misses so the engine's stats
+    expose cold-start behaviour.  One cache may serve several engines
+    (or several graphs) at once; entries are never evicted (a serving
+    process holds a handful of buckets by construction).
+    """
+
+    def __init__(self):
+        self._runners: dict[tuple, object] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._runners)
+
+    def key(self, graph: NetworkGraph, hwc, bucket: int,
+            variant: str = "local") -> tuple:
+        # The precision plan rides inside signature() (every node's
+        # format is part of the hashed compiled structure), so the key
+        # needs no second notion of precision identity.
+        return (graph.signature(), tuple(hwc), int(bucket), variant)
+
+    def get(self, graph: NetworkGraph, hwc, bucket: int, *,
+            build=None, variant: str = "local"):
+        """The compiled wave entrypoint for this (graph, geometry,
+        bucket) — built (and its bucket shape validated) on miss.
+        ``build`` overrides how the runner is constructed (the engine
+        passes the mesh-sharded builder, with a matching ``variant``
+        so local and sharded runners never collide)."""
+        key = self.key(graph, hwc, bucket, variant)
+        fn = self._runners.get(key)
+        if fn is None:
+            self.misses += 1
+            graph.shape_plan((bucket,) + tuple(hwc))
+            fn = build() if build is not None else graph.resident_runner()
+            self._runners[key] = fn
+        else:
+            self.hits += 1
+        return fn
+
+
+# ---------------------------------------------------------------------------
+# tune_conv_blocks persistence
+# ---------------------------------------------------------------------------
+def tune_cache_path(path: str | None = None) -> str:
+    """Explicit argument > ``HOBFLOPS_TUNE_CACHE`` env var > cwd
+    default."""
+    return path or os.environ.get(TUNE_CACHE_ENV) or _TUNE_CACHE_DEFAULT
+
+
+def load_tune_cache(path: str | None = None) -> dict:
+    p = tune_cache_path(path)
+    if not os.path.exists(p):
+        return {}
+    try:
+        with open(p) as f:
+            return json.load(f)
+    except (OSError, ValueError):   # unreadable/corrupt: retune
+        return {}
+
+
+def save_tune_cache(cache: dict, path: str | None = None) -> str:
+    """Merge ``cache`` into the file and replace it atomically: the
+    on-disk entries are re-read and merged first (so two processes
+    tuning *different* problems don't drop each other's winners — the
+    remaining same-key race just rewrites an equivalent winner), and
+    the write goes through a temp file + ``os.replace`` so a killed
+    process never leaves a torn JSON behind."""
+    p = tune_cache_path(path)
+    merged = {**load_tune_cache(path), **cache}
+    tmp = f"{p}.tmp.{os.getpid()}"
+    with open(tmp, "w") as f:
+        json.dump(merged, f, indent=2, sort_keys=True)
+        f.write("\n")
+    os.replace(tmp, p)
+    return p
+
+
+def tune_key(images_shape, kernels, fmt, *, backend: str = "jnp",
+             candidates=None, **conv_kw) -> str:
+    """Problem signature for one tuned conv: everything that affects
+    which launch configuration wins — shapes, kernel geometry, format,
+    stride/padding, backend, and the candidate set searched (a
+    restricted quick sweep must not answer for the full default
+    sweep) — and nothing that doesn't (weight values, timing iters)."""
+    if isinstance(kernels, ConvWeights):
+        geom = (kernels.kh, kernels.kw, kernels.cin, kernels.cout)
+    else:
+        geom = tuple(kernels.shape)
+    cand = "default" if candidates is None else sorted(
+        repr(tuple(sorted(c.items()))) for c in candidates)
+    return repr((tuple(images_shape), geom, (fmt.w_e, fmt.w_f), backend,
+                 conv_kw.get("stride", 1), conv_kw.get("padding", "SAME"),
+                 conv_kw.get("extended", False), cand))
+
+
+def tuned_conv_blocks(images, kernels, *, fmt, backend: str = "jnp",
+                      path: str | None = None, **tune_kw):
+    """``tune_conv_blocks`` with a JSON disk cache.
+
+    On a cache hit the stored block dict is returned without running a
+    single candidate (a seeded cache is honored verbatim — tests rely
+    on this); on a miss the sweep runs and its winner is persisted.
+    Returns ``(blocks, seconds_per_call_or_None)`` — the timing is None
+    on a hit (it was measured on some earlier process/machine and is
+    kept only as a provenance hint in the file).
+    """
+    key = tune_key(images.shape, kernels, fmt, backend=backend,
+                   candidates=tune_kw.get("candidates"),
+                   **{k: v for k, v in tune_kw.items()
+                      if k in ("stride", "padding", "extended")})
+    hit = load_tune_cache(path).get(key)
+    if hit is not None:
+        return dict(hit["blocks"]), None
+    best, results = tune_conv_blocks(images, kernels, fmt=fmt,
+                                     backend=backend, **tune_kw)
+    save_tune_cache({key: {"blocks": best,
+                           "seconds_per_call": min(results.values())}},
+                    path)
+    return best, min(results.values())

@@ -1,0 +1,210 @@
+"""Lane-batched inference engine for HOBFLOPS ``NetworkGraph`` models.
+
+The transformer engine (``serve/engine.py``, DESIGN.md §6) batches
+requests into decode *slots* of a lockstep wave; the CNN engine here
+exploits the HOBFLOPS-specific fact that the bitslice carrier's
+pixel-row axis *is* the batch axis (DESIGN.md §10): N queued images
+coalesce into one ``[N,H,W,C]`` wave that runs through the resident
+graph as one compiled call — one activation encode, one decode, and
+every plane netlist sweeping all N requests' rows at once.  Serving
+cost per image falls with occupancy because the per-wave fixed costs
+(dispatch, pack/unpack, netlist op issue) are batch-invariant until
+the arrays saturate the machine.
+
+Scheduling is wave admission: up to ``max_batch`` images of queued
+requests (whole requests only) are admitted per wave, the wave size is
+rounded up to a power-of-two batch *bucket* (compiled shapes stay
+bounded; the ragged tail rides as zero-image pad), and results are
+sliced back per request bit-exactly (``lanes.py``).  ``max_batch``
+defaults to a row budget derived from the kernel's tuned row blocking:
+the largest power of two keeping ``B*H*W`` within ``p_block * 512``
+rows.  An optional ``wave`` device mesh shards each wave's batch axis
+over devices (``sharding.py``); buckets then scale to mesh-size
+multiples.
+
+Throughput/latency/occupancy counters aggregate per wave and surface
+through :meth:`ConvServeEngine.stats`; ``benchmarks/serve.py`` turns
+them into the ``BENCH_serve.json`` trajectory.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+
+import jax
+import numpy as np
+
+from repro.kernels.conv2d_bitslice.network import NetworkGraph
+from repro.kernels.conv2d_bitslice.ops import derive_blocks
+from repro.serve_conv.cache import RunnerCache, bucket_for, bucket_sizes
+from repro.serve_conv.lanes import pack_wave, request_images, unpack_wave
+from repro.serve_conv.sharding import mesh_size, wave_sharded_runner
+
+
+@dataclasses.dataclass
+class ConvRequest:
+    """One queued inference request: a single [H,W,C] image or a
+    [B,H,W,C] mini-batch (heterogeneous counts mix freely in a
+    wave)."""
+    rid: int
+    image: np.ndarray
+    out: np.ndarray | None = None
+    done: bool = False
+    wave: int | None = None          # which wave served it
+    latency_s: float | None = None   # wave execution time it rode in
+
+
+def derive_max_batch(hwc, p_block: int = 8, row_budget_blocks: int = 512,
+                     cap: int = 64) -> int:
+    """Wave admission budget from the tuned row blocking: the largest
+    power of two whose wave stays within ``p_block * row_budget_blocks``
+    carrier rows (B*H*W), clamped to [1, cap]."""
+    h, w, _ = hwc
+    budget = max(1, (p_block * row_budget_blocks) // (h * w))
+    b = 1
+    while b * 2 <= min(budget, cap):
+        b *= 2
+    return b
+
+
+class ConvServeEngine:
+    """Wave-scheduled lane-batched serving of one frozen
+    :class:`NetworkGraph` at one input geometry.
+
+    >>> eng = ConvServeEngine(graph, (H, W, C))
+    >>> eng.submit(ConvRequest(0, img))
+    >>> done = eng.run()
+    >>> eng.stats()["images_per_s"], eng.stats()["mean_occupancy"]
+
+    Every request's output is bit-identical to ``graph.run`` on that
+    request alone — packing, bucket pad, and sharding never change a
+    single code (tests assert it).
+    """
+
+    def __init__(self, graph: NetworkGraph, hwc, *,
+                 max_batch: int | None = None, blocks: dict | None = None,
+                 mesh=None, runner_cache: RunnerCache | None = None,
+                 verbose: bool = False):
+        assert graph._out is not None, "freeze the graph (output()) first"
+        self.graph = graph
+        self.hwc = tuple(hwc)
+        h, w, c = self.hwc
+        # tuned block dicts carry only the swept keys (missing ones mean
+        # "use the derived default", same as the kernel launch)
+        p_block = (blocks or {}).get("p_block") \
+            or derive_blocks(h * w, 1, 1)["p_block"]
+        self.max_batch = max_batch or derive_max_batch(self.hwc, p_block)
+        self.mesh = mesh
+        if mesh is not None:
+            n = mesh_size(mesh)
+            if self.max_batch % n:
+                raise ValueError(
+                    f"max_batch {self.max_batch} must divide over the "
+                    f"{n}-device wave mesh")
+            self.buckets = tuple(n * b
+                                 for b in bucket_sizes(self.max_batch // n))
+        else:
+            self.buckets = bucket_sizes(self.max_batch)
+        # explicit None check: a fresh shared cache is empty == falsy
+        self.cache = RunnerCache() if runner_cache is None else runner_cache
+        self.queue: deque[ConvRequest] = deque()
+        self.macs_per_image = graph.macs((1,) + self.hwc)
+        # counters
+        self.waves = 0
+        self.images_served = 0
+        self.requests_served = 0
+        self.wave_seconds: list[float] = []
+        self.wave_occupancy: list[float] = []
+        if verbose:
+            print(f"ConvServeEngine: graph {graph.signature()} @ "
+                  f"{h}x{w}x{c}, max_batch {self.max_batch}, buckets "
+                  f"{self.buckets}, {self.macs_per_image:,} MACs/image")
+            print(graph.summary((1,) + self.hwc))
+
+    # -- admission ---------------------------------------------------------
+    def submit(self, req: ConvRequest):
+        n = request_images(req.image)
+        if n > self.max_batch:
+            raise ValueError(
+                f"request {req.rid} carries {n} images > max_batch "
+                f"{self.max_batch}; split it across requests")
+        if np.shape(req.image)[-3:] != self.hwc:
+            raise ValueError(
+                f"request {req.rid} geometry "
+                f"{np.shape(req.image)[-3:]} != engine geometry "
+                f"{self.hwc}")
+        self.queue.append(req)
+
+    def _admit(self) -> list[ConvRequest]:
+        """Pop whole requests while the wave stays within max_batch."""
+        wave, filled = [], 0
+        while self.queue:
+            n = request_images(self.queue[0].image)
+            if wave and filled + n > self.max_batch:
+                break
+            wave.append(self.queue.popleft())
+            filled += n
+        return wave
+
+    def _runner(self, bucket: int):
+        if self.mesh is None:
+            return self.cache.get(self.graph, self.hwc, bucket)
+        return self.cache.get(
+            self.graph, self.hwc, bucket,
+            build=lambda: wave_sharded_runner(self.graph, self.mesh),
+            variant=f"wave{mesh_size(self.mesh)}")
+
+    # -- one wave ----------------------------------------------------------
+    def run_wave(self) -> list[ConvRequest]:
+        wave = self._admit()
+        if not wave:
+            return []
+        batch, plan = pack_wave([r.image for r in wave],
+                                bucket_for(
+                                    sum(request_images(r.image)
+                                        for r in wave), self.buckets),
+                                hwc=self.hwc)
+        runner = self._runner(plan.bucket)
+        t0 = time.perf_counter()
+        out = np.asarray(jax.block_until_ready(runner(batch)))
+        dt = time.perf_counter() - t0
+        for req, res in zip(wave, unpack_wave(out, plan)):
+            req.out = res
+            req.done = True
+            req.wave = self.waves
+            req.latency_s = dt
+        self.waves += 1
+        self.images_served += plan.filled
+        self.requests_served += len(wave)
+        self.wave_seconds.append(dt)
+        self.wave_occupancy.append(plan.occupancy)
+        return wave
+
+    def run(self) -> list[ConvRequest]:
+        """Drain the queue; returns served requests in wave order."""
+        finished: list[ConvRequest] = []
+        while self.queue:
+            finished.extend(self.run_wave())
+        return finished
+
+    # -- counters ----------------------------------------------------------
+    def stats(self) -> dict:
+        total_s = sum(self.wave_seconds)
+        return {
+            "waves": self.waves,
+            "images_served": self.images_served,
+            "requests_served": self.requests_served,
+            "max_batch": self.max_batch,
+            "buckets": list(self.buckets),
+            "images_per_s": self.images_served / total_s if total_s else 0.0,
+            "macs_per_s": (self.images_served * self.macs_per_image
+                           / total_s if total_s else 0.0),
+            "mean_wave_s": total_s / self.waves if self.waves else 0.0,
+            "mean_occupancy": (sum(self.wave_occupancy)
+                               / len(self.wave_occupancy)
+                               if self.wave_occupancy else 0.0),
+            "runner_cache": {"size": len(self.cache),
+                             "hits": self.cache.hits,
+                             "misses": self.cache.misses},
+        }

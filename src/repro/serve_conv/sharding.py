@@ -1,0 +1,67 @@
+"""Multi-device wave sharding for the lane-batched serve engine.
+
+A packed wave is ``[B, H, W, C]`` images that become ``B*H*W`` pixel
+rows of the plane carrier — requests occupy disjoint row slabs (lanes
+carry channels; see ``lanes.py``).  Sharding a wave therefore splits
+the batch axis over a 1-D ``wave`` mesh: each device encodes, runs,
+and decodes its own slab of whole images through the same compiled
+resident graph.  No cross-device communication exists anywhere in the
+graph body (every plane op is row-local to an image), so the only
+collective is the implicit gather of ``out_specs``.
+
+Bit-exactness is inherited from the lane-packing argument: an image's
+rows compute identical codes whether its slab is the whole wave or a
+per-device shard, and each shard still performs exactly one encode and
+one decode.  ``tests/test_serve_conv.py`` asserts the sharded wave
+output equals the single-device wave bit-for-bit on a CPU mesh (and on
+a forced 2-device host in a subprocess).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.kernels.conv2d_bitslice.network import NetworkGraph
+from repro.launch.mesh import _mk
+
+
+def _shard_map():
+    sm = getattr(jax, "shard_map", None)
+    if sm is None:  # older jax keeps it in experimental
+        from jax.experimental.shard_map import shard_map as sm
+    return sm
+
+
+def wave_mesh(ndev: int | None = None):
+    """A 1-D ``wave`` mesh over the first ``ndev`` local devices (all
+    of them by default)."""
+    n = ndev or len(jax.devices())
+    return _mk((n,), ("wave",))
+
+
+def mesh_size(mesh) -> int:
+    return int(mesh.devices.size)
+
+
+def wave_sharded_runner(graph: NetworkGraph, mesh=None):
+    """A wave entrypoint ``images [B,H,W,C] -> [B,Ho,Wo,M]`` that
+    shard_maps the graph's compiled resident runner over the batch
+    axis.  ``B`` must divide by the mesh size (the engine guarantees
+    this by scaling its batch buckets to multiples of it); weights are
+    replicated."""
+    mesh = mesh or wave_mesh()
+    n = mesh_size(mesh)
+    fn, weights = graph._resident_fn, graph._live_weights
+    sharded = _shard_map()(fn, mesh=mesh, in_specs=(P("wave"), P()),
+                           out_specs=P("wave"))
+
+    def runner(images):
+        images = jnp.asarray(images, jnp.float32)
+        if images.shape[0] % n:
+            raise ValueError(
+                f"wave batch {images.shape[0]} does not divide over "
+                f"the {n}-device wave mesh")
+        return sharded(images, weights)
+
+    return runner

@@ -115,6 +115,90 @@ def test_maxpool_matches_f32(padding):
     np.testing.assert_array_equal(got, want)
 
 
+@pytest.mark.parametrize("padding", ["VALID", "SAME"])
+def test_window_gather_stride_gt_window(padding):
+    """stride (3) > window (2): gathered windows skip pixels entirely;
+    the plane-domain maxpool still equals the f32 reduce_window on
+    quantized input under both paddings."""
+    rng = np.random.default_rng(20)
+    img = _rand(rng, (1, 7, 7, 3), 2.0)
+    act = encode_activations(jnp.asarray(img), F9)
+    q = np.asarray(decode_activations(act))
+    out = maxpool2d_activations(act, window=2, stride=3, padding=padding)
+    got = np.asarray(decode_activations(out))
+    want = np.asarray(jax.lax.reduce_window(
+        jnp.asarray(q), -jnp.inf, jax.lax.max, (1, 2, 2, 1),
+        (1, 3, 3, 1), padding))
+    assert got.shape == want.shape
+    np.testing.assert_array_equal(got, want)
+
+
+def test_window_gather_window_equals_extent():
+    """window == the whole input extent (global pooling): one output
+    pixel; max equals the f32 global max, avg equals the pairwise
+    fp_add tree + fp_scale oracle."""
+    rng = np.random.default_rng(21)
+    img = _rand(rng, (2, 4, 4, 3), 2.0)
+    act = encode_activations(jnp.asarray(img), F9)
+    q = np.asarray(decode_activations(act))
+    gmax = maxpool2d_activations(act, window=4, padding="VALID")
+    got = np.asarray(decode_activations(gmax))
+    assert got.shape == (2, 1, 1, 3)
+    np.testing.assert_array_equal(got[:, 0, 0], q.max(axis=(1, 2)))
+    gavg = avgpool2d_activations(act, window=4, padding="VALID")
+    codes = np.asarray(sf.encode_jnp(jnp.asarray(img), F9))
+    from repro.kernels.conv2d_bitslice.ops import _fold_pairwise
+    wins = [codes[:, i, j, :] for i in range(4) for j in range(4)]
+    s = _fold_pairwise(wins, lambda a, b: sf.fp_add(a, b, F9))
+    want = sf.decode(sf.fp_scale(s, 4, F9), F9).astype(np.float32)
+    np.testing.assert_array_equal(
+        np.asarray(decode_activations(gavg))[:, 0, 0], want)
+
+
+def test_window_gather_pad_fill_codes():
+    """Direct geometry check of window_gather_planes under SAME-style
+    padding: pad slots of every plane decode to exactly the fill code
+    (-inf for max, +0 for avg), real slots to the source pixels."""
+    from repro.core.bitslice import unpack_planes, window_gather_planes
+    from repro.kernels.conv2d_bitslice.ops import neg_inf_code
+    rng = np.random.default_rng(22)
+    B, H, W, C = 1, 3, 3, 2
+    codes = rng.integers(0, 1 << F9.nbits, (B * H * W, C)).astype(np.int32)
+    planes = pack_planes(jnp.asarray(codes), F9.nbits)
+    for fill in (0, neg_inf_code(F9)):
+        wins, (Ho, Wo) = window_gather_planes(
+            planes, (B, H, W, C), 2, 2, stride=2, pad_h=1, pad_w=1,
+            fill_code=fill)
+        assert (Ho, Wo) == (2, 2)
+        # pad split is low-half-first: pad_h=1 -> no top pad, one
+        # bottom row; reference gather over the padded code grid
+        grid = np.full((H + 1, W + 1, C), fill, np.int64)
+        grid[:H, :W] = codes.reshape(H, W, C)
+        for k, (i, j) in enumerate((i, j) for i in range(2)
+                                   for j in range(2)):
+            got = np.asarray(unpack_planes(wins[k]))[:, :C]
+            want = grid[i::2, j::2][:2, :2].reshape(Ho * Wo, C)
+            np.testing.assert_array_equal(got, want, err_msg=f"win {k}")
+
+
+def test_avgpool_same_pad_counts_include_pad():
+    """avgpool SAME on an odd extent: +0 fill slots participate in the
+    add tree and the divisor stays the full window area — bit-exact to
+    the word-parallel oracle fold."""
+    from repro.kernels.conv2d_bitslice.network import GraphNode, _oracle_pool
+    rng = np.random.default_rng(23)
+    img = _rand(rng, (1, 5, 5, 3), 2.0)
+    act = encode_activations(jnp.asarray(img), F9)
+    q = np.asarray(decode_activations(act))
+    out = avgpool2d_activations(act, window=2, padding="SAME")
+    got = np.asarray(decode_activations(out))
+    nd = GraphNode("p", "avgpool2d", ("x",), stride=2, padding="SAME",
+                   window=(2, 2))
+    want = np.asarray(_oracle_pool(jnp.asarray(q), F9, nd))
+    assert got.shape == (1, 3, 3, 3)
+    np.testing.assert_array_equal(got, want)
+
+
 def test_avgpool_matches_oracle():
     """Plane-domain avgpool == fp_add tree + fp_scale on codes."""
     rng = np.random.default_rng(4)

@@ -43,6 +43,18 @@ def test_network_bench_smoke():
     assert row["macs"] > 0
 
 
+def test_serve_bench_smoke():
+    """Tier-1 smoke of the lane-batched serve engine: a tiny graph
+    serves 5 queued requests (one full wave + a ragged wave),
+    bit-exact vs the per-request run, and reports engine stats."""
+    sys.path.insert(0, _ROOT)
+    from benchmarks.serve import smoke
+    st = smoke()
+    assert st["waves"] == 2 and st["images_served"] == 5
+    assert st["runner_cache"]["misses"] >= 1
+    assert 0.0 < st["mean_occupancy"] <= 1.0
+
+
 def test_gates_chain_table_shape():
     """chain_table reports gates/MAC per lib with the fields the
     acceptance trajectory tracks."""
