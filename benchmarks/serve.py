@@ -17,6 +17,18 @@ and per-bucket wave timings with images/s, MACs/s, and the speedup vs
 the one-at-a-time loop.  The acceptance trajectory expects throughput
 to increase with bucket size, ≥2x at the largest bucket on hobflops8.
 
+The second half (``bench_load``) is the robustness benchmark
+(DESIGN.md §11): a seeded Poisson open-loop load generator drives one
+engine per admission policy over a sim clock — queue waits advance in
+simulated time, wave executions in *measured* wall time — and records
+p50/p99 end-to-end latency, throughput, occupancy, shed counts, and
+precision-degradation activations per offered-load point.  Three
+policies are contrasted: ``greedy`` (legacy: close any non-empty
+queue), ``deadline`` (deadline-or-full admission), and ``fill_only``
+(close only on a full bucket) — the last shows the unbounded tail that
+``wave_deadline_ms`` exists to cap, the first the throughput left on
+the table by never batching.
+
 Autotuned launch blocks come through the ``tuned_conv_blocks`` disk
 cache (``serve_conv/cache.py``), so repeat benchmark runs skip the
 sweep; override the cache path with ``HOBFLOPS_TUNE_CACHE``.
@@ -28,8 +40,8 @@ import numpy as np
 from benchmarks.network import _time_all
 from repro.core.fpformat import HOBFLOPS_FORMATS
 from repro.kernels.conv2d_bitslice.network import NetworkGraph
-from repro.serve_conv import (ConvRequest, ConvServeEngine, RunnerCache,
-                              tuned_conv_blocks)
+from repro.serve_conv import (ConvRequest, ConvServeEngine, QueueFullError,
+                              RunnerCache, ServePolicy, tuned_conv_blocks)
 
 # Serving workload: 3x3 conv -> pointwise conv -> 2x2 maxpool on a
 # HW x HW x C image.  Small on purpose: per-image marginal cost is the
@@ -143,6 +155,152 @@ def smoke(fmt_name: str = "hobflops8", hw: int = 6, c: int = 4) -> dict:
     return st
 
 
+class _SimClock:
+    """Injectable engine clock: queue waits pass in simulated seconds,
+    wave executions are fed back as their *measured* wall time."""
+
+    def __init__(self):
+        self.now = 0.0
+
+    def __call__(self) -> float:
+        return self.now
+
+    def advance(self, s: float):
+        self.now += s
+
+
+def _load_policy(kind: str, deadline_ms: float,
+                 max_queue: int) -> ServePolicy:
+    deadline = {"greedy": None, "deadline": deadline_ms,
+                "fill_only": 1e9}[kind]
+    return ServePolicy(wave_deadline_ms=deadline,
+                       max_queue_images=max_queue,
+                       degrade_queue_factor=2.0, degrade_patience=2,
+                       recover_patience=2)
+
+
+def _drive(eng, clock, arrivals, images) -> list:
+    """Open-loop event simulation: submit each arrival at its Poisson
+    timestamp, close waves per the engine's own admission policy, and
+    advance the sim clock by the measured execution time of every wave
+    (a single-threaded server is busy while a wave runs).  Returns the
+    served requests; sheds/quarantines stay on the engine's counters."""
+    served, i = [], 0
+    while i < len(arrivals) or eng.pending_images():
+        # admit every arrival that already happened in sim time — a
+        # wave execution is a busy period, and all requests that
+        # arrived during it are queued before the next wave closes
+        while i < len(arrivals) and arrivals[i] <= clock.now:
+            try:
+                eng.submit(ConvRequest(i, images[i]))
+            except QueueFullError:
+                pass                      # engine counted the shed
+            i += 1
+        if eng.pending_images() and eng.wave_ready():
+            out = eng.step()
+            if out:
+                clock.advance(eng.wave_seconds[-1])
+                served.extend(out)
+            continue
+        next_arrival = arrivals[i] if i < len(arrivals) else None
+        if next_arrival is None:
+            # trace over: flush the partial tail (fill_only would
+            # otherwise hold it for its ~infinite deadline)
+            while eng.pending_images():
+                out = eng.step(force=True)
+                if out:
+                    clock.advance(eng.wave_seconds[-1])
+                    served.extend(out)
+            break
+        deadline = eng.next_deadline() if eng.pending_images() else None
+        if deadline is not None and deadline < next_arrival:
+            # epsilon past the deadline: float rounding in the
+            # absolute-deadline reconstruction must not leave the
+            # oldest wait a hair under the threshold (livelock)
+            clock.now = max(clock.now, deadline) + 1e-6
+        else:
+            clock.now = max(clock.now, next_arrival)
+    return served
+
+
+def bench_load(fmt_name: str = "hobflops9", degrade_to: str = "hobflops8",
+               hw: int = HW_, c: int = C_, max_batch: int = 8,
+               load_factors=(0.25, 0.5, 1.0, 2.0, 4.0),
+               n_requests: int = 200, seed: int = 7) -> dict:
+    """Poisson offered load vs p50/p99 latency per admission policy.
+
+    Offered load is expressed as a multiple of the engine's measured
+    full-bucket capacity (images/s); the degradation ladder registers a
+    ``with_precision(degrade_to)`` variant so sustained overload sheds
+    precision before shedding requests."""
+    fmt = HOBFLOPS_FORMATS[fmt_name]
+    img, rng, g = build_serve_graph(fmt_name, hw, c, seed=seed)
+    g_deg = g.with_precision(HOBFLOPS_FORMATS[degrade_to])
+    hwc = (hw, hw, c)
+    cache = RunnerCache()
+
+    # Warm every (variant, bucket) runner through the shared cache so
+    # jit compile time never pollutes a simulated latency sample, and
+    # measure full-bucket capacity while we're at it.
+    wave_s = None
+    for graph in (g, g_deg):
+        eng = ConvServeEngine(graph, hwc, max_batch=max_batch,
+                              runner_cache=cache)
+        for b in eng.buckets:
+            for rep in range(3 if b == max_batch else 1):
+                for i in range(b):
+                    eng.submit(ConvRequest(i, rng.standard_normal(hwc)
+                                           .astype(np.float32)))
+                eng.run()
+        if graph is g:
+            wave_s = min(s for s, o in zip(eng.wave_seconds,
+                                           eng.wave_occupancy)
+                         if o == 1.0)
+    capacity = max_batch / wave_s
+    # one full-wave service time: a lone request waits at most one
+    # wave's worth before closing, while full buckets still close on
+    # fullness — the throughput/latency dial at a latency-ish setting
+    deadline_ms = wave_s * 1e3
+
+    images = [rng.standard_normal(hwc).astype(np.float32)
+              for _ in range(n_requests)]
+    points = []
+    for load in load_factors:
+        lam = load * capacity                        # images/s offered
+        arrivals = np.cumsum(rng.exponential(1.0 / lam, n_requests))
+        row = {"load_factor": load, "offered_images_per_s": lam}
+        for kind in ("greedy", "deadline", "fill_only"):
+            clock = _SimClock()
+            eng = ConvServeEngine(
+                g, hwc, max_batch=max_batch, runner_cache=cache,
+                clock=clock,
+                policy=_load_policy(kind, deadline_ms,
+                                    max_queue=8 * max_batch))
+            eng.register_degraded(g_deg, degrade_to)
+            served = _drive(eng, clock, arrivals, images)
+            st = eng.stats()
+            row[kind] = {
+                "served": len(served),
+                "shed": st["requests_shed"],
+                "throughput_images_per_s": len(served) / clock.now,
+                "p50_ms": st["p50_latency_ms"],
+                "p99_ms": st["p99_latency_ms"],
+                "mean_occupancy": st["mean_occupancy"],
+                "mean_wave_images": (st["images_served"] / st["waves"]
+                                     if st["waves"] else 0.0),
+                "degrade_activations": st["degradation"]["activations"],
+                "images_degraded": sum(
+                    v for k, v in
+                    st["degradation"]["images_by_level"].items()
+                    if k != "full"),
+            }
+        points.append(row)
+    return {"format": fmt_name, "degrade_to": degrade_to, "hw": hw,
+            "c": c, "max_batch": max_batch, "n_requests": n_requests,
+            "capacity_images_per_s": capacity,
+            "wave_deadline_ms": deadline_ms, "points": points}
+
+
 def run(quick: bool = False):
     formats = ["hobflops8", "hobflops9"]
     buckets = BUCKETS if not quick else (1, 2, 4, 8)
@@ -159,6 +317,20 @@ def run(quick: bool = False):
             rows.append(f"{name},{b},{rb['wave_images_per_s']:.1f},"
                         f"{r['single_images_per_s']:.1f},"
                         f"{rb['speedup_vs_single']:.2f}")
+    load = bench_load(max_batch=4 if quick else 8,
+                      load_factors=(0.5, 2.0) if quick
+                      else (0.25, 0.5, 1.0, 2.0, 4.0),
+                      n_requests=40 if quick else 200)
+    results["load"] = load
+    rows.append("policy,load_factor,p50_ms,p99_ms,throughput_images_per_s,"
+                "shed,images_degraded")
+    for point in load["points"]:
+        for kind in ("greedy", "deadline", "fill_only"):
+            p = point[kind]
+            rows.append(f"{kind},{point['load_factor']},"
+                        f"{p['p50_ms']:.3f},{p['p99_ms']:.3f},"
+                        f"{p['throughput_images_per_s']:.1f},"
+                        f"{p['shed']},{p['images_degraded']}")
     return "\n".join(rows), results
 
 

@@ -11,6 +11,12 @@ Launch blocks come from the ``tuned_conv_blocks`` disk cache
 (``.hobflops_tune.json`` by default, ``HOBFLOPS_TUNE_CACHE`` to
 override), so a second run of this example skips the autotune sweep.
 
+With ``--overload`` the demo also floods a small-bucket engine that
+has a cheaper-precision variant registered (DESIGN.md §11): sustained
+queue pressure steps the precision ladder down, each response is
+tagged with the precision that served it, and pressure relief steps
+back up — precision is shed before requests are.
+
 Run: PYTHONPATH=src python examples/serve_conv.py [--fmt hobflops9]
 """
 import argparse
@@ -23,7 +29,41 @@ import numpy as np
 
 from repro.core.fpformat import HOBFLOPS_FORMATS
 from repro.kernels.conv2d_bitslice.network import NetworkGraph
-from repro.serve_conv import ConvRequest, ConvServeEngine, tuned_conv_blocks
+from repro.serve_conv import (ConvRequest, ConvServeEngine, ServePolicy,
+                              tuned_conv_blocks)
+
+
+def overload_demo(g, hwc, rng, degrade_fmt):
+    """Flood a tiny-bucket engine so the precision ladder engages."""
+    g_cheap = g.with_precision(HOBFLOPS_FORMATS[degrade_fmt])
+    eng = ConvServeEngine(
+        g, hwc, max_batch=2,
+        policy=ServePolicy(degrade_queue_factor=1.0, degrade_patience=2,
+                           recover_patience=1))
+    eng.register_degraded(g_cheap, degrade_fmt)
+    for i in range(10):
+        eng.submit(ConvRequest(i, rng.standard_normal(hwc)
+                               .astype(np.float32)))
+    done = eng.run()
+    ladder = [f"{r.rid}:{r.precision}" for r in done]
+    print(f"overload: {' '.join(ladder)}")
+    st = eng.stats()["degradation"]
+    print(f"  activations={st['activations']} "
+          f"images_by_level={st['images_by_level']}")
+    # relief: one lightly-loaded wave steps back to full precision
+    eng.submit(ConvRequest(99, rng.standard_normal(hwc)
+                           .astype(np.float32)))
+    eng.run()
+    eng.submit(ConvRequest(100, rng.standard_normal(hwc)
+                           .astype(np.float32)))
+    last = eng.run()[0]
+    print(f"  after relief: request {last.rid} served at "
+          f"{last.precision!r} (level {last.level})")
+    for r in done + [last]:
+        graph = g if r.level == 0 else g_cheap
+        solo = np.asarray(graph.run(r.image[None]))[0]
+        assert (np.asarray(r.out) == solo).all(), r.rid
+    print("  every response bit-exact at its served precision")
 
 
 def main():
@@ -35,6 +75,8 @@ def main():
     ap.add_argument("--requests", type=int, default=10)
     ap.add_argument("--check", action="store_true",
                     help="verify each request vs per-request graph.run")
+    ap.add_argument("--overload", action="store_true",
+                    help="demo the precision-degradation ladder")
     args = ap.parse_args()
 
     fmt = HOBFLOPS_FORMATS[args.fmt]
@@ -88,6 +130,10 @@ def main():
             assert (np.asarray(r.out) == solo).all(), r.rid
         print(f"bit-exact vs per-request graph.run: "
               f"all {len(done)} requests OK")
+
+    if args.overload:
+        degrade = "hobflops8" if args.fmt != "hobflops8" else "hobflops9"
+        overload_demo(g, hwc, rng, degrade)
 
 
 if __name__ == "__main__":

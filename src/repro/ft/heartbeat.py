@@ -36,6 +36,23 @@ class Heartbeat:
         tmp.write_text(json.dumps(rec))
         tmp.rename(self.path)
 
+    def last(self) -> dict | None:
+        """This host's most recent beat record (None if never beaten
+        or the file is torn) — the serve engine surfaces it through
+        ``stats()`` so an external probe and the engine agree on what
+        liveness means."""
+        try:
+            return json.loads(self.path.read_text())
+        except (OSError, json.JSONDecodeError):
+            return None
+
+    def age_s(self, now: float | None = None) -> float | None:
+        """Seconds since the last beat (None if never beaten)."""
+        rec = self.last()
+        if rec is None:
+            return None
+        return (now if now is not None else time.time()) - rec["time"]
+
 
 def read_heartbeats(directory) -> dict[str, dict]:
     out = {}

@@ -5,6 +5,13 @@ fleet median.  Mitigation is the supervisor's call: at small excess it
 logs; at persistent excess it excludes the host and triggers an elastic
 re-mesh (checkpoint restore re-shards, see repro.checkpoint) — the same
 path as a hard failure, which keeps the recovery machinery singular.
+
+The serving engine reuses the same monitor with a different notion of
+"host": each batch *bucket* is one observed population of wave times,
+so a bucket whose waves run anomalously slow (an artificial straggler
+in the chaos tests, a pathological shape in production) surfaces in
+``ConvServeEngine.stats()["stragglers"]`` without any serving-specific
+detection code.
 """
 from __future__ import annotations
 
@@ -35,6 +42,11 @@ class StragglerMonitor:
         med = statistics.median(ready.values())
         return sorted(h for h, v in ready.items()
                       if v > self.factor * med)
+
+    def ema(self, host: str) -> float | None:
+        """The step-time EMA observed for one host (None if never
+        observed)."""
+        return self._ema.get(host)
 
     def fleet_summary(self) -> dict:
         if not self._ema:

@@ -269,6 +269,10 @@ class NetworkGraph:
             input_name: GraphNode(input_name, "input", (), input_fmt,
                                   rounding=input_rounding)}
         self._weights: dict[str, ConvWeights] = {}
+        # f32 kernels retained when conv() is given raw arrays, so
+        # with_precision() can re-encode the same weights at another
+        # format (pre-encoded ConvWeights carry only codes)
+        self._kernels_f32: dict[str, np.ndarray] = {}
         self._out: str | None = None
         self._resident_fn = None
         self._roundtrip_fn = None
@@ -315,8 +319,9 @@ class NetworkGraph:
                     f"conv {name!r}: pre-encoded weights are {w.fmt}, "
                     f"node precision is {fmt}")
         else:
-            w = encode_conv_weights(np.asarray(kernels, np.float32), fmt,
-                                    rounding)
+            kernels = np.asarray(kernels, np.float32)
+            w = encode_conv_weights(kernels, fmt, rounding)
+            self._kernels_f32[name] = kernels
         nm = self._insert(GraphNode(name, "conv", (src,), fmt,
                                     stride=stride, padding=padding,
                                     relu=relu, extended=extended,
@@ -473,6 +478,79 @@ class NetworkGraph:
     def out_shape(self, in_shape) -> tuple[int, int, int, int]:
         assert self._out is not None, "call output() first"
         return self.shape_plan(in_shape)[self._out]
+
+    def with_precision(self, fmt: FPFormat, *,
+                       input_fmt: FPFormat | None = None,
+                       fmt_map: dict | None = None) -> "NetworkGraph":
+        """A same-topology variant of this graph with every conv's
+        operand precision replaced by ``fmt`` — the builder for a
+        serving engine's precision-degradation ladder (the cheaper
+        variant answers the same requests with the same shapes at
+        lower cost).
+
+        Format-bearing fields map through a derived table: each
+        original conv operand format goes to ``fmt`` and its
+        accumulator formats ``mult_out(False/True)`` go to the matching
+        ``fmt.mult_out``; explicit ``cast``/``add`` targets and the
+        graph input format follow the same table (so a uniform-
+        precision graph stays uniform at the new precision, and casts
+        that targeted an accumulator format keep targeting the
+        accumulator).  ``fmt_map`` overrides/extends the table for
+        mixed-precision graphs that need finer control.  Weights are
+        re-encoded from the retained f32 kernels; a conv built from
+        pre-encoded :class:`ConvWeights` cannot be re-encoded and
+        raises.  The variant is frozen iff this graph is frozen (same
+        output node).
+        """
+        mapping: dict[FPFormat, FPFormat] = {}
+        for nd in self._nodes.values():
+            if nd.kind == "conv":
+                old = nd.precision
+                mapping[old] = fmt
+                for ext in (False, True):
+                    mapping[old.mult_out(ext)] = fmt.mult_out(ext)
+        mapping.update(fmt_map or {})
+        inp = self._nodes[self.input_name]
+        g = NetworkGraph(
+            input_fmt or mapping.get(self.input_fmt, fmt),
+            backend=self.backend, interpret=self.interpret,
+            input_name=self.input_name, input_rounding=inp.rounding)
+        for nd in self._nodes.values():
+            if nd.kind == "input":
+                continue
+            if nd.kind == "conv":
+                kernels = self._kernels_f32.get(nd.name)
+                if kernels is None:
+                    raise GraphValidationError(
+                        f"with_precision: conv {nd.name!r} was built "
+                        f"from pre-encoded ConvWeights; re-encoding at "
+                        f"{fmt} needs the f32 kernels — pass raw "
+                        f"arrays to conv() for graphs that degrade")
+                g.conv(nd.name, nd.inputs[0], kernels,
+                       mapping.get(nd.precision, fmt), stride=nd.stride,
+                       padding=nd.padding, relu=nd.relu,
+                       extended=nd.extended, rounding=nd.rounding,
+                       blocks=dict(nd.blocks) or None)
+            elif nd.kind == "maxpool2d":
+                g.maxpool2d(nd.name, nd.inputs[0], nd.window,
+                            stride=nd.stride, padding=nd.padding)
+            elif nd.kind == "avgpool2d":
+                g.avgpool2d(nd.name, nd.inputs[0], nd.window,
+                            stride=nd.stride, padding=nd.padding,
+                            rounding=nd.rounding)
+            elif nd.kind == "add":
+                g.add(nd.name, nd.inputs[0], nd.inputs[1],
+                      mapping.get(nd.precision) if nd.precision
+                      else None, rounding=nd.rounding)
+            elif nd.kind == "cast":
+                g.cast(nd.name, nd.inputs[0],
+                       mapping.get(nd.precision, nd.precision),
+                       rounding=nd.rounding)
+            else:  # relu
+                g.relu(nd.name, nd.inputs[0])
+        if self._out is not None:
+            g.output(self._out)
+        return g
 
     def signature(self) -> str:
         """Stable hash of the graph's *compiled structure*: topology,

@@ -26,6 +26,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import warnings
 
 from repro.kernels.conv2d_bitslice.network import NetworkGraph
 from repro.kernels.conv2d_bitslice.ops import ConvWeights, tune_conv_blocks
@@ -69,19 +70,41 @@ class RunnerCache:
     The jit cache inside jax already memoizes per shape; this layer
     exists to (a) make the compilation *policy* explicit — only bucket
     shapes ever reach jit, so the program count is bounded by the
-    bucket ladder — and (b) count hits/misses so the engine's stats
-    expose cold-start behaviour.  One cache may serve several engines
-    (or several graphs) at once; entries are never evicted (a serving
-    process holds a handful of buckets by construction).
+    bucket ladder — and (b) count hits/misses/evictions so the
+    engine's stats expose cold-start and self-healing behaviour.  One
+    cache may serve several engines (or several graphs) at once.
+    Entries are never evicted for capacity (a serving process holds a
+    handful of buckets by construction) but the executor evicts an
+    entry whose wave *failed* — a corrupted/bad runner can only be
+    cured by rebuild, and the next ``get`` re-misses cleanly.
     """
 
     def __init__(self):
         self._runners: dict[tuple, object] = {}
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
 
     def __len__(self) -> int:
         return len(self._runners)
+
+    def keys(self) -> tuple:
+        return tuple(self._runners)
+
+    def evict(self, key) -> bool:
+        """Drop one cached runner (the executor's bad-runner path);
+        True if the key was present."""
+        if key in self._runners:
+            del self._runners[key]
+            self.evictions += 1
+            return True
+        return False
+
+    def replace(self, key, fn):
+        """Swap a cached runner in place — the chaos layer's seam for
+        corrupting a live entry (``faults.corrupt_runner_cache``)."""
+        assert key in self._runners, key
+        self._runners[key] = fn
 
     def key(self, graph: NetworkGraph, hwc, bucket: int,
             variant: str = "local") -> tuple:
@@ -119,14 +142,33 @@ def tune_cache_path(path: str | None = None) -> str:
 
 
 def load_tune_cache(path: str | None = None) -> dict:
+    """Load the tune cache, tolerating a corrupted/truncated file.
+
+    The cache is an *accelerator*, never a correctness input, so a
+    file torn by a killed process or a bad disk must degrade to "no
+    cache" — warn (so operators see the lost winners), ignore the
+    content, and let the next :func:`save_tune_cache` rebuild the file
+    atomically (it merges from this loader, so a corrupt file merges
+    as empty and is simply replaced wholesale).  A parseable file with
+    a non-dict top level is corrupt too.
+    """
     p = tune_cache_path(path)
     if not os.path.exists(p):
         return {}
     try:
         with open(p) as f:
-            return json.load(f)
-    except (OSError, ValueError):   # unreadable/corrupt: retune
+            cache = json.load(f)
+        if not isinstance(cache, dict):
+            raise ValueError(
+                f"top-level JSON is {type(cache).__name__}, not object")
+    except (OSError, ValueError) as e:   # unreadable/corrupt: retune
+        warnings.warn(
+            f"tune cache {p!r} is corrupt or unreadable ({e}); "
+            f"ignoring it — sweeps will re-run and the next save "
+            f"rewrites the file atomically", RuntimeWarning,
+            stacklevel=2)
         return {}
+    return cache
 
 
 def save_tune_cache(cache: dict, path: str | None = None) -> str:

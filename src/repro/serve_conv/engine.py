@@ -1,4 +1,4 @@
-"""Lane-batched inference engine for HOBFLOPS ``NetworkGraph`` models.
+"""SLO-aware lane-batched inference engine for HOBFLOPS graphs.
 
 The transformer engine (``serve/engine.py``, DESIGN.md §6) batches
 requests into decode *slots* of a lockstep wave; the CNN engine here
@@ -6,25 +6,40 @@ exploits the HOBFLOPS-specific fact that the bitslice carrier's
 pixel-row axis *is* the batch axis (DESIGN.md §10): N queued images
 coalesce into one ``[N,H,W,C]`` wave that runs through the resident
 graph as one compiled call — one activation encode, one decode, and
-every plane netlist sweeping all N requests' rows at once.  Serving
-cost per image falls with occupancy because the per-wave fixed costs
-(dispatch, pack/unpack, netlist op issue) are batch-invariant until
-the arrays saturate the machine.
+every plane netlist sweeping all N requests' rows at once.
 
-Scheduling is wave admission: up to ``max_batch`` images of queued
-requests (whole requests only) are admitted per wave, the wave size is
-rounded up to a power-of-two batch *bucket* (compiled shapes stay
-bounded; the ragged tail rides as zero-image pad), and results are
-sliced back per request bit-exactly (``lanes.py``).  ``max_batch``
-defaults to a row budget derived from the kernel's tuned row blocking:
-the largest power of two keeping ``B*H*W`` within ``p_block * 512``
-rows.  An optional ``wave`` device mesh shards each wave's batch axis
-over devices (``sharding.py``); buckets then scale to mesh-size
-multiples.
+This module is the robust rebuild of that engine (DESIGN.md §11),
+split into three cooperating pieces:
 
-Throughput/latency/occupancy counters aggregate per wave and surface
-through :meth:`ConvServeEngine.stats`; ``benchmarks/serve.py`` turns
-them into the ``BENCH_serve.json`` trajectory.
+* :class:`WaveScheduler` — admission.  A bounded queue with typed
+  load-shedding (``QueueFullError``), per-request deadlines (aged-out
+  requests are expired at admission, never packed), and
+  *deadline-or-full* wave closing: a wave closes when it fills
+  ``max_batch`` **or** when the oldest queued request has waited
+  ``wave_deadline_ms`` — the throughput/latency dial.  Without a
+  deadline the legacy drain behaviour is preserved.
+* :class:`WaveExecutor` — execution.  Builds compiled runners through
+  the :class:`RunnerCache`, executes waves with bounded
+  retry-with-backoff, evicts possibly-bad cached runners before every
+  retry (the only cure for a corrupted cache entry), validates the
+  output shape (a garbage-shaped result is a failure, not an answer),
+  and feeds per-bucket wave times to a
+  :class:`~repro.ft.straggler.StragglerMonitor`.  All chaos seams
+  (``faults.py``) thread through here.
+* :class:`ConvServeEngine` — the composition.  Validates requests at
+  ``submit()`` with the typed taxonomy (``errors.py``), runs the
+  stepped admission loop, routes overloaded waves to pre-registered
+  cheaper-precision graph variants under the
+  :class:`~repro.serve_conv.policy.OverloadController` hysteresis
+  ladder, quarantines the requests of a wave that failed its whole
+  retry budget (the engine keeps serving), tracks p50/p99 end-to-end
+  latency, and beats a :class:`~repro.ft.heartbeat.Heartbeat` for
+  external liveness probes.
+
+Every *served* response — full precision or degraded, retried or not —
+remains bit-identical to ``graph.run`` on that request alone **at the
+precision it was served at**, and carries that precision as an
+explicit tag (``req.precision``/``req.level``).
 """
 from __future__ import annotations
 
@@ -35,24 +50,45 @@ from collections import deque
 import jax
 import numpy as np
 
+from repro.ft.heartbeat import Heartbeat
+from repro.ft.straggler import StragglerMonitor
 from repro.kernels.conv2d_bitslice.network import NetworkGraph
 from repro.kernels.conv2d_bitslice.ops import derive_blocks
 from repro.serve_conv.cache import RunnerCache, bucket_for, bucket_sizes
+from repro.serve_conv.errors import (DeadlineExceededError, QueueFullError,
+                                     WaveExecutionError,
+                                     validate_request_image)
 from repro.serve_conv.lanes import pack_wave, request_images, unpack_wave
+from repro.serve_conv.policy import OverloadController, ServePolicy
 from repro.serve_conv.sharding import mesh_size, wave_sharded_runner
 
 
 @dataclasses.dataclass
 class ConvRequest:
     """One queued inference request: a single [H,W,C] image or a
-    [B,H,W,C] mini-batch (heterogeneous counts mix freely in a
-    wave)."""
+    [B,H,W,C] mini-batch (heterogeneous counts mix freely in a wave).
+
+    Lifecycle fields the engine fills in: ``status`` moves through
+    ``queued -> served | failed | expired``; ``error`` holds the typed
+    reason for the two failure states; ``precision``/``level``/
+    ``degraded`` tag which registered graph variant served it (level 0
+    = full precision); ``latency_s`` is the wave execution time it rode
+    in and ``e2e_latency_s`` adds its queue wait."""
     rid: int
     image: np.ndarray
     out: np.ndarray | None = None
     done: bool = False
     wave: int | None = None          # which wave served it
     latency_s: float | None = None   # wave execution time it rode in
+    deadline_ms: float | None = None  # per-request deadline override
+    submitted_at: float | None = None
+    status: str = "queued"
+    error: Exception | None = None
+    precision: str | None = None     # label of the variant that served it
+    level: int | None = None         # ladder level (0 = full precision)
+    degraded: bool = False
+    attempts: int = 0                # wave executions it took
+    e2e_latency_s: float | None = None
 
 
 def derive_max_batch(hwc, p_block: int = 8, row_budget_blocks: int = 512,
@@ -68,27 +104,222 @@ def derive_max_batch(hwc, p_block: int = 8, row_budget_blocks: int = 512,
     return b
 
 
+# ---------------------------------------------------------------------------
+# Scheduler: bounded queue + deadline-or-full wave closing
+# ---------------------------------------------------------------------------
+class WaveScheduler:
+    """Admission state: the bounded request queue and the wave-closing
+    decision.  Pure bookkeeping — no jax, no execution — so the policy
+    is testable with a fake clock."""
+
+    def __init__(self, max_batch: int, policy: ServePolicy):
+        self.max_batch = max_batch
+        self.policy = policy
+        self.queue: deque[ConvRequest] = deque()
+        self.queued_images = 0
+
+    def __len__(self) -> int:
+        return len(self.queue)
+
+    def submit(self, req: ConvRequest, n_images: int, now: float):
+        """Enqueue or shed: a bounded queue rejects with a typed
+        :class:`QueueFullError` instead of growing without limit."""
+        cap = self.policy.max_queue_images
+        if cap is not None and self.queued_images + n_images > cap:
+            raise QueueFullError(
+                f"queue holds {self.queued_images} images; request "
+                f"{req.rid} (+{n_images}) exceeds max_queue_images "
+                f"{cap}")
+        req.submitted_at = now
+        req.status = "queued"
+        self.queue.append(req)
+        self.queued_images += n_images
+
+    def pressure(self) -> float:
+        """Backlog in waves: queued images / max_batch — the overload
+        controller's input signal."""
+        return self.queued_images / self.max_batch
+
+    def _deadline_ms(self, req: ConvRequest) -> float | None:
+        return req.deadline_ms if req.deadline_ms is not None \
+            else self.policy.request_timeout_ms
+
+    def expire(self, now: float) -> list[ConvRequest]:
+        """Sweep out requests whose per-request deadline has passed —
+        they are marked ``expired`` with a typed error and never reach
+        a wave (serving them late helps no one and steals lanes)."""
+        expired = []
+        keep = deque()
+        for req in self.queue:
+            dl = self._deadline_ms(req)
+            if dl is not None and (now - req.submitted_at) * 1e3 > dl:
+                req.status = "expired"
+                req.error = DeadlineExceededError(
+                    f"request {req.rid} waited "
+                    f"{(now - req.submitted_at) * 1e3:.1f}ms > deadline "
+                    f"{dl:.1f}ms")
+                self.queued_images -= request_images(req.image)
+                expired.append(req)
+            else:
+                keep.append(req)
+        self.queue = keep
+        return expired
+
+    def oldest_wait_ms(self, now: float) -> float | None:
+        if not self.queue:
+            return None
+        return (now - self.queue[0].submitted_at) * 1e3
+
+    def next_deadline(self) -> float | None:
+        """Absolute clock time at which the oldest queued request
+        forces the wave closed (None: empty queue or no deadline
+        policy).  Lets a driving loop sleep exactly until the next
+        admission event instead of polling."""
+        if not self.queue or self.policy.wave_deadline_ms is None:
+            return None
+        return self.queue[0].submitted_at \
+            + self.policy.wave_deadline_ms / 1e3
+
+    def wave_ready(self, now: float) -> bool:
+        """Deadline-or-full: the wave closes when queued images fill
+        ``max_batch`` or the oldest request has waited
+        ``wave_deadline_ms``.  With no deadline configured any
+        non-empty queue is ready (legacy drain behaviour)."""
+        if not self.queue:
+            return False
+        if self.policy.wave_deadline_ms is None:
+            return True
+        if self.queued_images >= self.max_batch:
+            return True
+        return self.oldest_wait_ms(now) >= self.policy.wave_deadline_ms
+
+    def take(self) -> list[ConvRequest]:
+        """Pop whole requests while the wave stays within max_batch."""
+        wave, filled = [], 0
+        while self.queue:
+            n = request_images(self.queue[0].image)
+            if wave and filled + n > self.max_batch:
+                break
+            wave.append(self.queue.popleft())
+            filled += n
+        self.queued_images -= filled
+        return wave
+
+
+# ---------------------------------------------------------------------------
+# Executor: build + run waves with retry/backoff, eviction, chaos seams
+# ---------------------------------------------------------------------------
+class WaveExecutor:
+    """Owns everything between "here is a packed wave" and "here are
+    its output planes": runner build through the cache, bounded
+    retry-with-backoff, bad-runner eviction, output-shape validation,
+    and straggler observation.  Raises :class:`WaveExecutionError`
+    only after the whole retry budget is spent."""
+
+    def __init__(self, cache: RunnerCache, policy: ServePolicy, *,
+                 faults=None, straggler: StragglerMonitor | None = None,
+                 sleep=time.sleep):
+        self.cache = cache
+        self.policy = policy
+        self.faults = faults
+        self.straggler = straggler
+        self._sleep = sleep
+        self.retries = 0            # re-executions after a failure
+        self.failures = 0           # failed executions (incl. retried)
+
+    def _runner(self, graph: NetworkGraph, hwc, bucket: int, mesh):
+        variant = "local" if mesh is None else f"wave{mesh_size(mesh)}"
+
+        def build():
+            if self.faults is not None:
+                self.faults.on_build()
+            if mesh is None:
+                return graph.resident_runner()
+            return wave_sharded_runner(graph, mesh)
+
+        fn = self.cache.get(graph, hwc, bucket, build=build,
+                            variant=variant)
+        key = self.cache.key(graph, hwc, bucket, variant)
+        return fn, key
+
+    def execute(self, graph: NetworkGraph, hwc, bucket: int, batch,
+                out_shape, mesh=None):
+        """Run one packed wave; returns ``(out, seconds, attempts)``.
+
+        Each attempt rebuilds/refetches the runner (so an injected or
+        real compile failure is retried too), executes, and validates
+        the output shape.  Any failure evicts the cached runner for
+        this key — a corrupted cache entry can only be cured by
+        rebuild — then backs off exponentially before the next try.
+        """
+        delay = self.policy.retry_backoff_s
+        budget = self.policy.max_wave_retries + 1
+        last: Exception | None = None
+        for attempt in range(1, budget + 1):
+            try:
+                fn, key = self._runner(graph, hwc, bucket, mesh)
+                if self.faults is not None:
+                    fn = self.faults.wrap_runner(fn)
+                t0 = time.perf_counter()
+                out = np.asarray(jax.block_until_ready(fn(batch)))
+                dt = time.perf_counter() - t0
+                if out.shape != tuple(out_shape):
+                    raise RuntimeError(
+                        f"wave output shape {out.shape} != expected "
+                        f"{tuple(out_shape)} (corrupted runner?)")
+                if self.straggler is not None:
+                    self.straggler.observe(f"bucket{bucket}", dt)
+                return out, dt, attempt
+            except Exception as e:  # noqa: BLE001 — the executor is the
+                # translation boundary: unknown infrastructure errors
+                # (and injected chaos) become the typed taxonomy here.
+                last = e
+                self.failures += 1
+                self.cache.evict(
+                    self.cache.key(graph, hwc, bucket,
+                                   "local" if mesh is None
+                                   else f"wave{mesh_size(mesh)}"))
+                if attempt < budget:
+                    self.retries += 1
+                    self._sleep(delay)
+                    delay *= self.policy.backoff_multiplier
+        raise WaveExecutionError(
+            f"wave failed after {budget} attempt(s): {last!r}",
+            attempts=budget) from last
+
+
+# ---------------------------------------------------------------------------
+# The engine
+# ---------------------------------------------------------------------------
 class ConvServeEngine:
-    """Wave-scheduled lane-batched serving of one frozen
-    :class:`NetworkGraph` at one input geometry.
+    """SLO-aware wave-scheduled serving of a frozen
+    :class:`NetworkGraph` (plus optional cheaper-precision variants)
+    at one input geometry.
 
-    >>> eng = ConvServeEngine(graph, (H, W, C))
+    >>> eng = ConvServeEngine(graph, (H, W, C),
+    ...                       policy=ServePolicy(wave_deadline_ms=5.0))
+    >>> eng.register_degraded(graph.with_precision(fmt8), "hobflops8")
     >>> eng.submit(ConvRequest(0, img))
-    >>> done = eng.run()
-    >>> eng.stats()["images_per_s"], eng.stats()["mean_occupancy"]
+    >>> done = eng.run()          # or eng.step() in a serving loop
+    >>> eng.stats()["p99_latency_ms"], done[0].precision
 
-    Every request's output is bit-identical to ``graph.run`` on that
-    request alone — packing, bucket pad, and sharding never change a
-    single code (tests assert it).
-    """
+    Every served request's output is bit-identical to ``graph.run`` on
+    that request alone *at the precision it was served at* — packing,
+    bucket pad, sharding, retries, and degradation never change a
+    single code (tests assert it)."""
 
     def __init__(self, graph: NetworkGraph, hwc, *,
                  max_batch: int | None = None, blocks: dict | None = None,
                  mesh=None, runner_cache: RunnerCache | None = None,
-                 verbose: bool = False):
+                 policy: ServePolicy | None = None, faults=None,
+                 heartbeat_dir: str | None = None,
+                 heartbeat_host: str = "serve0",
+                 clock=time.monotonic, verbose: bool = False):
         assert graph._out is not None, "freeze the graph (output()) first"
         self.graph = graph
         self.hwc = tuple(hwc)
+        self.policy = policy or ServePolicy()
+        self.clock = clock
         h, w, c = self.hwc
         # tuned block dicts carry only the swept keys (missing ones mean
         # "use the derived default", same as the kernel launch)
@@ -108,93 +339,200 @@ class ConvServeEngine:
             self.buckets = bucket_sizes(self.max_batch)
         # explicit None check: a fresh shared cache is empty == falsy
         self.cache = RunnerCache() if runner_cache is None else runner_cache
-        self.queue: deque[ConvRequest] = deque()
+        self.scheduler = WaveScheduler(self.max_batch, self.policy)
+        self.straggler = StragglerMonitor()
+        self.executor = WaveExecutor(self.cache, self.policy,
+                                     faults=faults,
+                                     straggler=self.straggler)
+        self.heartbeat = (Heartbeat(heartbeat_dir, host=heartbeat_host)
+                          if heartbeat_dir else None)
         self.macs_per_image = graph.macs((1,) + self.hwc)
+        # precision ladder: level 0 is the full-precision graph; higher
+        # levels are pre-registered cheaper variants (register_degraded)
+        self._variants: list[tuple[str, NetworkGraph, int]] = [
+            ("full", graph, self.macs_per_image)]
+        self.controller = OverloadController(1, self.policy)
         # counters
         self.waves = 0
+        self.waves_failed = 0
         self.images_served = 0
         self.requests_served = 0
+        self.requests_failed = 0
+        self.requests_expired = 0
+        self.requests_rejected = 0
+        self.requests_shed = 0
         self.wave_seconds: list[float] = []
         self.wave_occupancy: list[float] = []
+        self.request_latencies: list[float] = []
+        self.images_by_level: dict[str, int] = {}
+        self.quarantined: list[ConvRequest] = []
+        self.expired: list[ConvRequest] = []
         if verbose:
             print(f"ConvServeEngine: graph {graph.signature()} @ "
                   f"{h}x{w}x{c}, max_batch {self.max_batch}, buckets "
                   f"{self.buckets}, {self.macs_per_image:,} MACs/image")
             print(graph.summary((1,) + self.hwc))
 
+    # -- precision ladder --------------------------------------------------
+    def register_degraded(self, graph: NetworkGraph,
+                          label: str | None = None) -> int:
+        """Append a cheaper-precision variant to the degradation
+        ladder (level ``len-1``); registration order is full precision
+        first, cheapest last.  The variant must be frozen and must
+        produce the same output geometry as the primary graph for this
+        engine's HxWxC — degradation changes codes, never shapes.
+        Returns the variant's ladder level."""
+        assert graph._out is not None, "freeze the variant (output()) first"
+        want = self.graph.out_shape((1,) + self.hwc)
+        got = graph.out_shape((1,) + self.hwc)
+        if want != got:
+            raise ValueError(
+                f"degraded variant output shape {got} != primary "
+                f"{want} at {self.hwc} — a variant may change "
+                f"precision, not geometry")
+        level = len(self._variants)
+        label = label or f"degraded{level}"
+        self._variants.append((label, graph,
+                               graph.macs((1,) + self.hwc)))
+        # fresh controller sized to the new ladder (registration
+        # happens at setup time, before traffic)
+        self.controller = OverloadController(len(self._variants),
+                                             self.policy)
+        return level
+
+    @property
+    def variants(self) -> tuple[str, ...]:
+        return tuple(label for label, _, _ in self._variants)
+
     # -- admission ---------------------------------------------------------
     def submit(self, req: ConvRequest):
-        n = request_images(req.image)
-        if n > self.max_batch:
-            raise ValueError(
-                f"request {req.rid} carries {n} images > max_batch "
-                f"{self.max_batch}; split it across requests")
-        if np.shape(req.image)[-3:] != self.hwc:
-            raise ValueError(
-                f"request {req.rid} geometry "
-                f"{np.shape(req.image)[-3:]} != engine geometry "
-                f"{self.hwc}")
-        self.queue.append(req)
+        """Validate then enqueue.  Unservable payloads raise
+        :class:`RequestValidationError` and a full queue raises
+        :class:`QueueFullError` — in both cases the request never
+        enters the queue and can never poison a wave."""
+        try:
+            n = validate_request_image(req.image, self.hwc,
+                                       max_images=self.max_batch)
+        except Exception:
+            self.requests_rejected += 1
+            req.status = "rejected"
+            raise
+        try:
+            self.scheduler.submit(req, n, self.clock())
+        except QueueFullError:
+            self.requests_shed += 1
+            req.status = "shed"
+            raise
 
-    def _admit(self) -> list[ConvRequest]:
-        """Pop whole requests while the wave stays within max_batch."""
-        wave, filled = [], 0
-        while self.queue:
-            n = request_images(self.queue[0].image)
-            if wave and filled + n > self.max_batch:
-                break
-            wave.append(self.queue.popleft())
-            filled += n
-        return wave
+    def pending_images(self) -> int:
+        return self.scheduler.queued_images
 
-    def _runner(self, bucket: int):
-        if self.mesh is None:
-            return self.cache.get(self.graph, self.hwc, bucket)
-        return self.cache.get(
-            self.graph, self.hwc, bucket,
-            build=lambda: wave_sharded_runner(self.graph, self.mesh),
-            variant=f"wave{mesh_size(self.mesh)}")
+    def wave_ready(self) -> bool:
+        return self.scheduler.wave_ready(self.clock())
 
-    # -- one wave ----------------------------------------------------------
-    def run_wave(self) -> list[ConvRequest]:
-        wave = self._admit()
-        if not wave:
+    def next_deadline(self) -> float | None:
+        return self.scheduler.next_deadline()
+
+    # -- one admission step ------------------------------------------------
+    def step(self, force: bool = False) -> list[ConvRequest]:
+        """One pass of the admission loop: expire aged-out requests,
+        decide whether a wave should close (deadline-or-full; ``force``
+        closes any non-empty queue — the drain path), pick the
+        precision level under current pressure, execute, and either
+        complete or quarantine the wave.  Returns the requests *served*
+        by this step (empty when no wave closed or the wave failed)."""
+        now = self.clock()
+        for req in self.scheduler.expire(now):
+            self.requests_expired += 1
+            self.expired.append(req)
+        if not self.scheduler.queue:
             return []
-        batch, plan = pack_wave([r.image for r in wave],
-                                bucket_for(
-                                    sum(request_images(r.image)
-                                        for r in wave), self.buckets),
+        if not (force or self.scheduler.wave_ready(now)):
+            return []
+        level = self.controller.observe(self.scheduler.pressure())
+        label, graph, macs_img = self._variants[level]
+        wave = self.scheduler.take()
+        filled = sum(request_images(r.image) for r in wave)
+        bucket = bucket_for(filled, self.buckets)
+        batch, plan = pack_wave([r.image for r in wave], bucket,
                                 hwc=self.hwc)
-        runner = self._runner(plan.bucket)
-        t0 = time.perf_counter()
-        out = np.asarray(jax.block_until_ready(runner(batch)))
-        dt = time.perf_counter() - t0
+        out_shape = graph.out_shape((bucket,) + self.hwc)
+        try:
+            out, dt, attempts = self.executor.execute(
+                graph, self.hwc, bucket, batch, out_shape,
+                mesh=self.mesh)
+        except WaveExecutionError as e:
+            # Quarantine: only this wave's requests fail; the engine
+            # keeps admitting and serving subsequent waves.
+            for req in wave:
+                req.status = "failed"
+                req.error = e
+                req.done = False
+            self.requests_failed += len(wave)
+            self.waves_failed += 1
+            self.quarantined.extend(wave)
+            if self.heartbeat is not None:
+                self.heartbeat.beat(self.waves, step_time_s=None)
+            return []
         for req, res in zip(wave, unpack_wave(out, plan)):
             req.out = res
             req.done = True
+            req.status = "served"
             req.wave = self.waves
             req.latency_s = dt
+            req.precision = label
+            req.level = level
+            req.degraded = level > 0
+            req.attempts = attempts
+            # queue wait (engine clock) + execution (wall clock): the
+            # end-to-end latency the p50/p99 SLO tracks
+            req.e2e_latency_s = (now - req.submitted_at) + dt
+            self.request_latencies.append(req.e2e_latency_s)
         self.waves += 1
         self.images_served += plan.filled
         self.requests_served += len(wave)
         self.wave_seconds.append(dt)
         self.wave_occupancy.append(plan.occupancy)
+        self.images_by_level[label] = \
+            self.images_by_level.get(label, 0) + plan.filled
+        if self.heartbeat is not None:
+            self.heartbeat.beat(self.waves, step_time_s=dt)
         return wave
 
+    def run_wave(self) -> list[ConvRequest]:
+        """Close and execute one wave from whatever is queued (legacy
+        immediate-drain entrypoint)."""
+        return self.step(force=True)
+
     def run(self) -> list[ConvRequest]:
-        """Drain the queue; returns served requests in wave order."""
+        """Drain the queue; returns *served* requests in wave order
+        (quarantined/expired requests are in ``self.quarantined`` /
+        ``self.expired`` with their typed errors)."""
         finished: list[ConvRequest] = []
-        while self.queue:
-            finished.extend(self.run_wave())
+        while self.scheduler.queue:
+            finished.extend(self.step(force=True))
         return finished
 
     # -- counters ----------------------------------------------------------
     def stats(self) -> dict:
         total_s = sum(self.wave_seconds)
+        lat = np.asarray(self.request_latencies, np.float64)
+        hb = None
+        if self.heartbeat is not None:
+            rec = self.heartbeat.last()
+            hb = {"host": self.heartbeat.host,
+                  "step": rec["step"] if rec else None,
+                  "path": str(self.heartbeat.path)}
         return {
             "waves": self.waves,
+            "waves_failed": self.waves_failed,
             "images_served": self.images_served,
             "requests_served": self.requests_served,
+            "requests_failed": self.requests_failed,
+            "requests_expired": self.requests_expired,
+            "requests_rejected": self.requests_rejected,
+            "requests_shed": self.requests_shed,
+            "queued_images": self.scheduler.queued_images,
             "max_batch": self.max_batch,
             "buckets": list(self.buckets),
             "images_per_s": self.images_served / total_s if total_s else 0.0,
@@ -204,7 +542,20 @@ class ConvServeEngine:
             "mean_occupancy": (sum(self.wave_occupancy)
                                / len(self.wave_occupancy)
                                if self.wave_occupancy else 0.0),
+            "p50_latency_ms": (float(np.percentile(lat, 50)) * 1e3
+                               if lat.size else None),
+            "p99_latency_ms": (float(np.percentile(lat, 99)) * 1e3
+                               if lat.size else None),
+            "wave_retries": self.executor.retries,
+            "wave_exec_failures": self.executor.failures,
             "runner_cache": {"size": len(self.cache),
                              "hits": self.cache.hits,
-                             "misses": self.cache.misses},
+                             "misses": self.cache.misses,
+                             "evictions": self.cache.evictions},
+            "degradation": {**self.controller.stats(),
+                            "variants": list(self.variants),
+                            "images_by_level": dict(self.images_by_level)},
+            "stragglers": self.straggler.stragglers(),
+            "straggler_fleet": self.straggler.fleet_summary(),
+            "heartbeat": hb,
         }

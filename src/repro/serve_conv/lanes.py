@@ -29,6 +29,8 @@ import dataclasses
 
 import numpy as np
 
+from repro.serve_conv.errors import RequestValidationError, ServeError
+
 
 @dataclasses.dataclass(frozen=True)
 class WaveSlot:
@@ -65,7 +67,7 @@ def request_images(image) -> int:
         return 1
     if nd == 4:
         return int(np.shape(image)[0])
-    raise ValueError(
+    raise RequestValidationError(
         f"request image must be [H,W,C] or [B,H,W,C], got rank {nd}")
 
 
@@ -79,7 +81,8 @@ def pack_wave(images, bucket: int, hwc=None):
     ``bucket`` is zero images (the +0 code in every plane — dead rows
     the slots never read back).  Returns ``(batch, WavePlan)``.
     """
-    assert images, "pack_wave: empty wave"
+    if not images:
+        raise ServeError("pack_wave: empty wave")
     slots, parts, off = [], [], 0
     for img in images:
         request_images(img)        # the single rank-contract check
@@ -90,14 +93,14 @@ def pack_wave(images, bucket: int, hwc=None):
         if hwc is None:
             hwc = arr.shape[1:]
         elif arr.shape[1:] != tuple(hwc):
-            raise ValueError(
+            raise RequestValidationError(
                 f"request geometry {arr.shape[1:]} != engine geometry "
                 f"{tuple(hwc)} (one engine instance serves one HxWxC)")
         slots.append(WaveSlot(off, arr.shape[0], squeeze))
         parts.append(arr)
         off += arr.shape[0]
     if off > bucket:
-        raise ValueError(
+        raise ServeError(
             f"wave holds {off} images but the bucket is {bucket}")
     if off < bucket:
         parts.append(np.zeros((bucket - off,) + tuple(hwc), np.float32))

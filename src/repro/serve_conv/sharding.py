@@ -24,6 +24,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.kernels.conv2d_bitslice.network import NetworkGraph
 from repro.launch.mesh import _mk
+from repro.serve_conv.errors import WaveShardingError
 
 
 def _shard_map():
@@ -59,7 +60,7 @@ def wave_sharded_runner(graph: NetworkGraph, mesh=None):
     def runner(images):
         images = jnp.asarray(images, jnp.float32)
         if images.shape[0] % n:
-            raise ValueError(
+            raise WaveShardingError(
                 f"wave batch {images.shape[0]} does not divide over "
                 f"the {n}-device wave mesh")
         return sharded(images, weights)

@@ -23,9 +23,10 @@ from repro.kernels.conv2d_bitslice.network import NetworkGraph
 from repro.kernels.conv2d_bitslice.ops import (decode_activations,
                                                encode_activations)
 from repro.serve_conv import (ConvRequest, ConvServeEngine, RunnerCache,
-                              bucket_for, bucket_sizes, derive_max_batch,
-                              pack_wave, tuned_conv_blocks, unpack_wave,
-                              wave_mesh, wave_sharded_runner)
+                              ServeError, bucket_for, bucket_sizes,
+                              derive_max_batch, pack_wave,
+                              tuned_conv_blocks, unpack_wave, wave_mesh,
+                              wave_sharded_runner)
 from repro.serve_conv.cache import TUNE_CACHE_ENV, tune_cache_path, tune_key
 
 F8 = FPFormat(5, 2)
@@ -71,7 +72,7 @@ def test_pack_wave_validates_geometry():
     rng = np.random.default_rng(1)
     with pytest.raises(ValueError, match="geometry"):
         pack_wave([_rand(rng, (4, 4, 3)), _rand(rng, (5, 5, 3))], 4)
-    with pytest.raises(ValueError, match="bucket"):
+    with pytest.raises(ServeError, match="bucket"):
         pack_wave([_rand(rng, (3, 4, 4, 3))], 2)
 
 
@@ -147,7 +148,7 @@ def test_engine_one_encode_decode_per_wave():
     rng = np.random.default_rng(4)
     g = _graph(rng)
     eng = ConvServeEngine(g, (8, 8, 4), max_batch=4)
-    runner = eng._runner(4)
+    runner, _ = eng.executor._runner(g, (8, 8, 4), 4, None)
     jaxpr = jax.make_jaxpr(runner)(np.zeros((4, 8, 8, 4), np.float32))
     assert count_primitives(jaxpr.jaxpr, "bitcast_convert_type") == 2
 
@@ -177,7 +178,8 @@ def test_runner_cache_buckets_bound_compiles():
     assert len(cache) == 3                       # buckets 1, 2, 4
     assert cache.misses == 3 and cache.hits == 2
     st = eng.stats()
-    assert st["runner_cache"] == {"size": 3, "hits": 2, "misses": 3}
+    assert st["runner_cache"] == {"size": 3, "hits": 2, "misses": 3,
+                                  "evictions": 0}
 
 
 def test_runner_cache_key_separates_graphs():
