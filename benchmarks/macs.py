@@ -8,17 +8,28 @@ custom format) while the TPU numbers come from the §Roofline dry-run.
 Inputs are pre-transformed (codes / bit planes), matching the paper's
 "IFM and Kernel data pre-transformed to HOBFLOPS" methodology.
 
-Two bitslice variants are measured per format to track the perf
+Three bitslice variants are measured per format to track the perf
 trajectory (recorded in BENCH_macs.json by ``benchmarks/run.py``):
 
-* ``seed``      — one MAC netlist per channel step (c_unroll=1), the
-                  repo's original hot path.
-* ``chain{K}``  — the fused K-step MAC chain netlist advancing K
-                  channels per step (fewer gates/MAC + fewer scan
-                  steps; DESIGN.md §3).
+* ``seed``          — one MAC netlist per channel step (c_unroll=1),
+                      the repo's original hot path (the gate
+                      interpreter backend).
+* ``chain{K}``      — the fused K-step MAC chain netlist advancing K
+                      channels per step (fewer gates/MAC + fewer scan
+                      steps; DESIGN.md §3).
+* ``pallas_fused``  — the fused compiler backend (DESIGN.md §12): the
+                      whole chain lowered to one register-file Pallas
+                      kernel with the fusion-shaped bus assembly.
+
+Every format row carries the full column set (seed / chain / fused /
+speedups) plus per-format ``vs_native_f32`` / ``vs_softfp16`` ratios
+so regressions read at a glance.  ``python -m benchmarks.macs --smoke``
+is the CI backend-parity gate: both backends run one small workload
+and the process fails on any bit mismatch.
 """
 from __future__ import annotations
 
+import functools
 import time
 
 import jax
@@ -26,6 +37,7 @@ import numpy as np
 
 from repro.core import softfloat as sf
 from repro.core.fpformat import HOBFLOPS_FORMATS, RNE, RTZ, FPFormat
+from repro.core.pallas_backend import fused_chain_k, fused_mac_pallas
 from repro.kernels.bitslice_mac.ops import _bitslice_mac_jnp, encode_inputs
 
 # Workload: P output pixels x C channels x M kernels (paper Fig. 5).
@@ -60,6 +72,19 @@ def bench_bitslice(fmt: FPFormat, rounding: str = RNE,
     fn = jax.jit(lambda a, b: _bitslice_mac_jnp(
         a, b, fmt=fmt, extended=extended, rounding=rounding,
         c_unroll=c_unroll))
+    dt = _time(fn, i_masks, w_planes)
+    return (P_ * C_ * M_) / dt, dt
+
+
+def bench_fused(fmt: FPFormat, rounding: str = RNE,
+                extended: bool = False, c_unroll: int = CHAIN_K):
+    """The pallas_fused backend on the same workload; c_unroll is
+    resolved through the backend's own chain-depth policy."""
+    i_masks, w_planes = _workload(fmt, rounding)
+    fn = jax.jit(functools.partial(
+        fused_mac_pallas, fmt=fmt, extended=extended, rounding=rounding,
+        p_block=P_, m_block=M_ // 32, c_block=C_, c_unroll=c_unroll,
+        interpret=True))
     dt = _time(fn, i_masks, w_planes)
     return (P_ * C_ * M_) / dt, dt
 
@@ -110,6 +135,38 @@ FORMATS_FULL = ["hobflops8", "hobflops9", "hobflops10", "hobflops11",
                 "hobflops12", "hobflops14", "hobflops16"]
 
 
+def _bench_format(name: str, fmt: FPFormat, rounding: str,
+                  extended: bool, f32_rate: float, sf_rate: float,
+                  rows: list) -> dict:
+    """The full column set for one (format, rounding, extended) row —
+    every benchmarked format gets the same columns (the seed report
+    left extended rows with chain-only numbers)."""
+    label = name + ("e" if extended else "")
+    seed_rate, seed_dt = bench_bitslice(fmt, rounding, extended,
+                                        c_unroll=1)
+    chain_rate, chain_dt = bench_bitslice(fmt, rounding, extended,
+                                          c_unroll=CHAIN_K)
+    fused_k = fused_chain_k(fmt, extended, CHAIN_K)
+    fused_rate, fused_dt = bench_fused(fmt, rounding, extended)
+    rows.append(f"hobflops_bitslice_seed,{label},{rounding},"
+                f"{seed_rate:.3e},{seed_dt*1e6:.1f}")
+    rows.append(f"hobflops_bitslice_chain{CHAIN_K},{label},"
+                f"{rounding},{chain_rate:.3e},{chain_dt*1e6:.1f}")
+    rows.append(f"hobflops_pallas_fused,{label},{rounding},"
+                f"{fused_rate:.3e},{fused_dt*1e6:.1f}")
+    best = max(seed_rate, chain_rate, fused_rate)
+    return {
+        "seed_macs_per_s": seed_rate,
+        f"chain{CHAIN_K}_macs_per_s": chain_rate,
+        "speedup_vs_seed": chain_rate / seed_rate,
+        "pallas_fused_macs_per_s": fused_rate,
+        "fused_chain_k": fused_k,
+        "fused_speedup_vs_interpreter": fused_rate / seed_rate,
+        "vs_native_f32": best / f32_rate,
+        "vs_softfp16": best / sf_rate,
+    }
+
+
 def run(quick: bool = False):
     formats = ["hobflops8", "hobflops9", "hobflops16"] if quick \
         else FORMATS_FULL
@@ -128,29 +185,48 @@ def run(quick: bool = False):
         fmt = HOBFLOPS_FORMATS[name]
         per_fmt = results["formats"].setdefault(name, {})
         for rounding in ((RNE,) if quick else (RNE, RTZ)):
-            seed_rate, seed_dt = bench_bitslice(fmt, rounding, c_unroll=1)
-            chain_rate, chain_dt = bench_bitslice(fmt, rounding,
-                                                  c_unroll=CHAIN_K)
-            rows.append(f"hobflops_bitslice_seed,{name},{rounding},"
-                        f"{seed_rate:.3e},{seed_dt*1e6:.1f}")
-            rows.append(f"hobflops_bitslice_chain{CHAIN_K},{name},"
-                        f"{rounding},{chain_rate:.3e},{chain_dt*1e6:.1f}")
-            per_fmt[rounding] = {
-                "seed_macs_per_s": seed_rate,
-                f"chain{CHAIN_K}_macs_per_s": chain_rate,
-                "speedup_vs_seed": chain_rate / seed_rate,
-            }
+            per_fmt[rounding] = _bench_format(name, fmt, rounding, False,
+                                              f32_rate, sf_rate, rows)
     for name in (["hobflops9"] if quick else ["hobflops8", "hobflops9",
                                               "hobflops16"]):
-        rate, dt = bench_bitslice(HOBFLOPS_FORMATS[name], RNE,
-                                  extended=True, c_unroll=CHAIN_K)
-        rows.append(f"hobflops_bitslice_chain{CHAIN_K},{name}e,rne,"
-                    f"{rate:.3e},{dt*1e6:.1f}")
-        results["formats"].setdefault(name + "e", {})["rne"] = {
-            f"chain{CHAIN_K}_macs_per_s": rate}
+        results["formats"].setdefault(name + "e", {})["rne"] = \
+            _bench_format(name, HOBFLOPS_FORMATS[name], RNE, True,
+                          f32_rate, sf_rate, rows)
     return "\n".join(rows), results
 
 
+# ---------------------------------------------------------------------------
+# CI backend-parity smoke
+# ---------------------------------------------------------------------------
+def smoke() -> bool:
+    """Both backends on one small workload, compared bit-for-bit on
+    the raw OFM planes — the CI ``backend-parity`` gate.  Covers the
+    plain-stack (hobflops8) and one-hot (hobflops16) assembly paths.
+    Returns True on exact agreement."""
+    ok = True
+    for name in ("hobflops8", "hobflops16"):
+        fmt = HOBFLOPS_FORMATS[name]
+        i_masks, w_planes = _workload(fmt, RNE)
+        ku = fused_chain_k(fmt, False, CHAIN_K)
+        ref = np.asarray(jax.jit(functools.partial(
+            _bitslice_mac_jnp, fmt=fmt, extended=False, rounding=RNE,
+            c_unroll=ku))(i_masks, w_planes))
+        got = np.asarray(jax.jit(functools.partial(
+            fused_mac_pallas, fmt=fmt, extended=False, rounding=RNE,
+            p_block=P_, m_block=M_ // 32, c_block=C_, c_unroll=ku,
+            interpret=True))(i_masks, w_planes))
+        same = np.array_equal(ref, got)
+        ok &= same
+        print(f"smoke {name}: jnp vs pallas_fused "
+              f"{'MATCH' if same else 'MISMATCH'} "
+              f"(planes {ref.shape}, chain_k={ku})")
+    return ok
+
+
 if __name__ == "__main__":
-    text, _ = run()
+    import sys
+
+    if "--smoke" in sys.argv:
+        sys.exit(0 if smoke() else 1)
+    text, _ = run("--quick" in sys.argv)
     print(text)

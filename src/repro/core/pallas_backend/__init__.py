@@ -1,0 +1,23 @@
+"""Fused Pallas netlist compiler backend (DESIGN.md §12).
+
+Lowers a whole optimized netlist — the K-step MAC chain plus its
+round/relu epilogue — into a *single* Pallas kernel body: the
+``_slot_schedule`` register allocation becomes an explicit in-kernel
+register file of lane-word temporaries, every gate becomes one
+straight-line vector bitwise op, and bus I/O maps onto the kernel's
+block-specced refs so the launch tiles through the existing
+``tune_conv_blocks`` machinery.
+
+Selected as ``backend="pallas_fused"`` in ``hobflops_matmul`` /
+``conv_core`` / ``NetworkGraph`` / ``ConvServeEngine``; bit-identical
+to the gate-interpreter backends and the softfloat oracle.
+"""
+from .emitter import (STACK_MAX_DEFAULT, LoweredNetlist,
+                      RegisterFileOverflow, lower_netlist)
+from .kernel import fused_chain_lowered, fused_mac_pallas, fused_chain_k
+
+__all__ = [
+    "STACK_MAX_DEFAULT", "LoweredNetlist", "RegisterFileOverflow",
+    "lower_netlist", "fused_chain_lowered", "fused_mac_pallas",
+    "fused_chain_k",
+]

@@ -1,0 +1,213 @@
+"""Netlist -> fused-kernel-body emitter.
+
+``lower_netlist`` turns an optimized :class:`~repro.core.circuit.Graph`
+into a :class:`LoweredNetlist`: a callable whose trace is the *body* of
+a fused kernel.  Three things distinguish it from the plain
+``make_jax_fn`` gate interpreter (DESIGN.md §12):
+
+* **Register file.**  The ``_slot_schedule`` register allocation is
+  realized as a fixed-size file of lane-word temporaries.  The file
+  size is pinned at lowering time; a netlist whose peak live-slot count
+  exceeds an explicitly requested file raises
+  :class:`RegisterFileOverflow` *before anything executes* — the
+  backend fails loudly rather than spilling silently or corrupting
+  lanes.
+
+* **Straight-line gates.**  Each gate is exactly the cell's vector
+  bitwise form (MUX as the 3-op ``b ^ (s & (a ^ b))``, LUT3 as its
+  minterm expansion) with operands read from register-file slots — the
+  software mirror of the paper's topologically-sorted generated C.
+
+* **Bus assembly policy.**  How the output planes leave the kernel is
+  *the* performance decision on the XLA CPU backend, which has no
+  multi-output fusion and caps per-instruction indexing-path
+  duplication at ~15 (``FusionNodeIndexingEvaluation``).  A bus
+  assembled with a ``concatenate`` of more operands than the cap makes
+  XLA split every output cone into its own fusion, recomputing the
+  shared netlist interior per cone (measured 17x duplication and a
+  ~6 MMAC/s hobflops16).  Policy: buses at or under ``stack_max``
+  planes use the plain stack (one fusion, zero redundancy — the
+  hobflops8/9 fast path); wider buses are assembled by an or-tree of
+  one-hot-masked broadcasts — pure same-shape elementwise ops with a
+  single fusion root, trading ~50% arithmetic overhead for the removal
+  of the 17x duplication (measured 3x end-to-end on hobflops16).
+"""
+from __future__ import annotations
+
+import weakref
+
+from repro.core.circuit import (FALSE, OP_AND, OP_ANDN, OP_INPUT, OP_LUT3,
+                                OP_MUX, OP_NOT, OP_OR, OP_XOR, TRUE, Graph)
+from repro.core.codegen import _slot_schedule
+
+# XLA CPU's FusionNodeIndexingEvaluation refuses fusions once a shared
+# instruction accumulates ~15 distinct indexing paths; a concatenate
+# contributes one path per operand, so buses stay under this.
+STACK_MAX_DEFAULT = 14
+
+
+class RegisterFileOverflow(RuntimeError):
+    """The netlist needs more live lane-word temporaries than the
+    requested register file holds.  Raised at lowering time — the fused
+    backend never spills and never truncates the file silently."""
+
+    def __init__(self, need: int, have: int):
+        self.need = need
+        self.have = have
+        super().__init__(
+            f"netlist needs {need} register-file slots but the file "
+            f"holds {have}; enlarge the file (or leave regfile_size "
+            f"unset to size it from the schedule)")
+
+
+def _assemble_bus(descs, env, zeros, ones, stack_max: int):
+    """Assemble one output bus from register-file slots.
+
+    ``descs`` are the ``("slot", s)`` / ``("const", 0|1)`` wire
+    descriptors of ``_slot_schedule``; returns a stacked
+    ``[width, ...lanes]`` plane array built per the policy above.
+    """
+    import jax.numpy as jnp
+
+    planes = [env[s] if kind == "slot" else (ones if s else zeros)
+              for kind, s in descs]
+    shape = jnp.broadcast_shapes(*(getattr(p, "shape", ())
+                                   for p in planes))
+    n = len(descs)
+    if n <= stack_max:
+        return jnp.stack([jnp.broadcast_to(p, shape) for p in planes])
+
+    # One-hot masked or-tree: every term is the full [n, ...lanes]
+    # shape with exactly one live row, so the whole assembly is
+    # same-shape elementwise ops under a single fusion root.  Constant
+    # rows fold into one template term.  The masks are built from an
+    # in-trace iota (not closed-over arrays): Pallas kernel bodies may
+    # not capture non-scalar constants, and XLA constant-folds the
+    # iota/compare chain to the same mask either way.
+    import jax
+
+    rows = jax.lax.broadcasted_iota(jnp.int32,
+                                    (n,) + (1,) * len(shape), 0)
+
+    def onehot(r):
+        return -(rows == r).astype(jnp.int32)        # 0 / -1 row mask
+
+    terms = []
+    tmpl = None
+    for r, ((kind, s), p) in enumerate(zip(descs, planes)):
+        if kind == "const":
+            if s:
+                tmpl = onehot(r) if tmpl is None else tmpl | onehot(r)
+            continue
+        terms.append(jnp.broadcast_to(p, (n,) + shape) & onehot(r))
+    if tmpl is not None:
+        terms.append(jnp.broadcast_to(tmpl, (n,) + shape))
+    if not terms:
+        return jnp.broadcast_to(jnp.zeros((), jnp.int32), (n,) + shape)
+    while len(terms) > 1:
+        terms = [terms[i] | terms[i + 1]
+                 for i in range(0, len(terms) - 1, 2)] + \
+            ([terms[-1]] if len(terms) % 2 else [])
+    return terms[0]
+
+
+class LoweredNetlist:
+    """A netlist lowered to a fused kernel body.
+
+    Calling it with ``**{bus: planes}`` traces the straight-line gate
+    program over the register file and returns assembled output plane
+    arrays per bus — bit-identical to ``eval_netlist`` /
+    ``make_jax_fn`` on the same graph (the assembly policy changes the
+    XLA fusion shape, never the values).
+    """
+
+    def __init__(self, graph: Graph, steps, nslots: int, out_wires,
+                 regfile_size: int, stack_max: int):
+        self.graph = graph
+        self.steps = steps
+        self.nslots = nslots
+        self.out_wires = out_wires
+        self.regfile_size = regfile_size
+        self.stack_max = stack_max
+
+    def __call__(self, **inputs):
+        import jax.numpy as jnp
+
+        sample = next(iter(inputs.values()))
+        zeros = jnp.zeros_like(sample[0])
+        ones = ~zeros
+        nodes = self.graph.nodes
+        regs: list = [None] * self.regfile_size   # the register file
+
+        def rd(slot, child):
+            if slot >= 0:
+                return regs[slot]
+            return ones if child == TRUE else zeros
+
+        for nid, slot, cs, free_after in self.steps:
+            n = nodes[nid]
+            if n.op == OP_INPUT:
+                name, bit = n.aux
+                v = inputs[name][bit]
+            elif n.op == OP_NOT:
+                v = ~rd(cs[0], n.a)
+            elif n.op == OP_AND:
+                v = rd(cs[0], n.a) & rd(cs[1], n.b)
+            elif n.op == OP_OR:
+                v = rd(cs[0], n.a) | rd(cs[1], n.b)
+            elif n.op == OP_XOR:
+                v = rd(cs[0], n.a) ^ rd(cs[1], n.b)
+            elif n.op == OP_ANDN:
+                v = rd(cs[0], n.a) & ~rd(cs[1], n.b)
+            elif n.op == OP_MUX:
+                s, a, b = rd(cs[0], n.a), rd(cs[1], n.b), rd(cs[2], n.c)
+                v = b ^ (s & (a ^ b))
+            elif n.op == OP_LUT3:
+                a, b, c = rd(cs[0], n.a), rd(cs[1], n.b), rd(cs[2], n.c)
+                tt = n.aux
+                v = zeros
+                for m in range(8):
+                    if (tt >> m) & 1:
+                        t = (a if m & 1 else ~a)
+                        t = t & (b if m & 2 else ~b)
+                        t = t & (c if m & 4 else ~c)
+                        v = v | t
+            else:  # pragma: no cover
+                raise ValueError(f"bad op {n.op}")
+            for f in free_after:
+                regs[f] = None
+            regs[slot] = v
+        return {name: _assemble_bus(descs, regs, zeros, ones,
+                                    self.stack_max)
+                for name, descs in self.out_wires.items()}
+
+
+# One lowering per (graph, file size, policy) — repeated kernel traces
+# of the same netlist reuse the schedule instead of re-allocating.
+_LOWER_CACHE: "weakref.WeakKeyDictionary[Graph, dict]" = \
+    weakref.WeakKeyDictionary()
+
+
+def lower_netlist(graph: Graph, *, regfile_size: int | None = None,
+                  stack_max: int = STACK_MAX_DEFAULT) -> LoweredNetlist:
+    """Lower ``graph`` to a fused kernel body.
+
+    ``regfile_size`` pins the register file; ``None`` sizes it from the
+    schedule's peak live-slot count.  An explicit size smaller than the
+    peak raises :class:`RegisterFileOverflow` immediately.
+    ``stack_max`` is the bus-assembly policy threshold (see module
+    docstring); values are unaffected, only XLA fusion shape.
+    """
+    per_graph = _LOWER_CACHE.setdefault(graph, {})
+    key = (regfile_size, stack_max)
+    cached = per_graph.get(key)
+    if cached is not None:
+        return cached
+    steps, nslots, out_wires = _slot_schedule(graph)
+    size = nslots if regfile_size is None else regfile_size
+    if nslots > size:
+        raise RegisterFileOverflow(nslots, size)
+    lowered = LoweredNetlist(graph, steps, nslots, out_wires, size,
+                             stack_max)
+    per_graph[key] = lowered
+    return lowered

@@ -1,0 +1,148 @@
+"""The fused MAC-chain Pallas kernel.
+
+One ``pl.pallas_call`` carries the whole layer: the K-step MAC chain
+netlist (lowered by :mod:`.emitter` into a straight-line register-file
+program), the channel reduction as an in-kernel ``fori_loop`` over
+ref slices, and the ReLU epilogue as two in-kernel ops on the final
+C-step — so a fused conv emits exactly one kernel in its jaxpr where
+the gate-interpreter backends emit hundreds of elementwise HLO ops.
+
+Grid/BlockSpec layout matches ``bitslice_mac_pallas`` (DESIGN.md §5):
+the C reduction is the innermost grid axis with output-block
+revisiting, P and M tile through ``tune_conv_blocks``'s block knobs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.fpcore import build_mac_chain
+from repro.core.fpformat import RNE, FPFormat
+from repro.core.opt import optimize_mapped
+
+from .emitter import STACK_MAX_DEFAULT, LoweredNetlist, lower_netlist
+
+
+@functools.lru_cache(maxsize=None)
+def fused_chain_lowered(fmt: FPFormat, k: int, extended: bool,
+                        rounding: str, lib: str = "tpu_vpu",
+                        stack_max: int = STACK_MAX_DEFAULT
+                        ) -> LoweredNetlist:
+    """The optimized ``lib``-mapped K-step MAC chain, lowered once per
+    (format, chain depth, rounding, policy) to a fused kernel body."""
+    mapped = optimize_mapped(build_mac_chain(fmt, k, extended, rounding),
+                             lib)
+    return lower_netlist(mapped, stack_max=stack_max)
+
+
+def fused_chain_k(fmt: FPFormat, extended: bool = False,
+                  requested: int = 4,
+                  stack_max: int = STACK_MAX_DEFAULT) -> int:
+    """Chain depth the fused backend actually uses.
+
+    Wide-accumulator formats (out bus past ``stack_max``, e.g.
+    hobflops16's 19 planes) keep ``k=1``: their chain bodies grow the
+    XLA compile time superlinearly (minutes at k=4) while the one-hot
+    bus assembly already removes the cone-duplication that chaining
+    would otherwise amortize.  Narrow formats keep the requested depth.
+    """
+    nout = fmt.mult_out(extended).nbits
+    return 1 if nout > stack_max else max(1, requested)
+
+
+def _fused_mac_kernel(i_ref, w_ref, o_ref, *, c_block: int,
+                      c_unroll: int, nout: int, n_c: int, sign_off: int,
+                      relu: bool, fmt: FPFormat, extended: bool,
+                      rounding: str, stack_max: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        # +0.0 in FloPoCo encoding is the all-zero code word.
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    lowered = fused_chain_lowered(fmt, c_unroll, extended, rounding,
+                                  stack_max=stack_max)
+    acc_shape = o_ref.shape            # (NOUT, P_blk, Mt)
+    assert acc_shape[0] == nout, (acc_shape, nout)
+    assert c_block % c_unroll == 0, (c_block, c_unroll)
+
+    def step(s, acc):
+        base = s * c_unroll
+        xw = w_ref[pl.ds(base, c_unroll)]        # [c_unroll, NIN, Mt]
+        yb = i_ref[:, pl.ds(base, c_unroll), :]  # [P_blk, c_unroll, NIN]
+        kwargs = {"acc": acc}
+        for j in range(c_unroll):
+            kwargs[f"x{j}"] = xw[j][:, None, :]              # [NIN,1,Mt]
+            kwargs[f"y{j}"] = jnp.transpose(yb[:, j, :],
+                                            (1, 0))[:, :, None]
+        out = lowered(**kwargs)["out"]
+        return jnp.broadcast_to(out, acc_shape)
+
+    o_ref[...] = jax.lax.fori_loop(0, c_block // c_unroll, step,
+                                   o_ref[...])
+
+    if relu:
+        # In-kernel epilogue, only once the C reduction is complete:
+        # clear every plane where the sign plane is set (the
+        # hobflops_relu_planes semantics, DESIGN.md §8).
+        @pl.when(ci == n_c - 1)
+        def _epilogue():
+            acc = o_ref[...]
+            o_ref[...] = acc & ~acc[sign_off][None]
+
+
+def fused_mac_pallas(i_masks, w_planes, *, fmt: FPFormat,
+                     extended: bool = False, rounding: str = RNE,
+                     p_block: int = 8, m_block: int = 128,
+                     c_block: int = 64, c_unroll: int = 4,
+                     relu: bool = False, interpret: bool = False,
+                     stack_max: int = STACK_MAX_DEFAULT):
+    """Launch the fused MAC-chain kernel.
+
+    Same contract as ``bitslice_mac_pallas`` (i_masks [P, C, NIN] in
+    {0, -1}, w_planes [C, NIN, Mw], returns OFM planes [NOUT, P, Mw])
+    plus the fused ReLU epilogue; ``c_unroll`` is additionally clamped
+    through :func:`fused_chain_k`.  Bit-identical to the interpreter
+    backends for every format x rounding (tests pin this), and the
+    whole layer is one ``pallas_call``.
+    """
+    P, C, nin = i_masks.shape
+    C2, nin2, Mw = w_planes.shape
+    assert (C, nin) == (C2, nin2), (i_masks.shape, w_planes.shape)
+    assert nin == fmt.nbits
+    fmt_out = fmt.mult_out(extended)
+    nout = fmt_out.nbits
+    p_block = min(p_block, P)
+    m_block = min(m_block, Mw)
+    c_block = min(c_block, C)
+    assert P % p_block == 0 and Mw % m_block == 0 and C % c_block == 0
+    c_unroll = fused_chain_k(fmt, extended,
+                             max(1, min(c_unroll, c_block)), stack_max)
+    while c_block % c_unroll:
+        c_unroll -= 1
+
+    n_c = C // c_block
+    grid = (P // p_block, Mw // m_block, n_c)
+    kernel = functools.partial(
+        _fused_mac_kernel, c_block=c_block, c_unroll=c_unroll,
+        nout=nout, n_c=n_c, sign_off=fmt_out.sign_off, relu=relu,
+        fmt=fmt, extended=extended, rounding=rounding,
+        stack_max=stack_max)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((p_block, c_block, nin),
+                         lambda pi, mi, ci: (pi, ci, 0)),
+            pl.BlockSpec((c_block, nin, m_block),
+                         lambda pi, mi, ci: (ci, 0, mi)),
+        ],
+        out_specs=pl.BlockSpec((nout, p_block, m_block),
+                               lambda pi, mi, ci: (0, pi, mi)),
+        out_shape=jax.ShapeDtypeStruct((nout, P, Mw), jnp.int32),
+        interpret=interpret,
+    )(i_masks, w_planes)

@@ -3,12 +3,21 @@
 ``hobflops_matmul``: float32 in / float32 out GEMM whose arithmetic is
 custom-precision HOBFLOPS FP executed bitslice-parallel.  Two backends:
 
-* ``backend="pallas"``  — the TPU kernel (``interpret=True`` on CPU).
-* ``backend="jnp"``     — the same synthesized netlist traced as plain
-                          XLA elementwise ops over full arrays; used for
-                          CPU benchmarking and as a portability fallback.
+* ``backend="pallas"``       — the TPU kernel (``interpret=True`` on
+                               CPU); the netlist is traced per grid
+                               step by the gate interpreter.
+* ``backend="jnp"``          — the same synthesized netlist traced as
+                               plain XLA elementwise ops over full
+                               arrays; used for CPU benchmarking and as
+                               a portability fallback.
+* ``backend="pallas_fused"`` — the fused compiler backend
+                               (``repro.core.pallas_backend``,
+                               DESIGN.md §12): the whole MAC chain
+                               lowered to a single-``pallas_call``
+                               register-file kernel with the
+                               fusion-shaped bus assembly.
 
-Both produce bit-identical results; tests cross-check them and the
+All produce bit-identical results; tests cross-check them and the
 pure softfloat oracle in ref.py.
 """
 from __future__ import annotations
@@ -21,6 +30,7 @@ import jax.numpy as jnp
 from repro.core import softfloat as sf
 from repro.core.bitslice import pack_planes, unpack_planes
 from repro.core.fpformat import RNE, FPFormat
+from repro.core.pallas_backend import fused_mac_pallas
 
 from .kernel import bitslice_mac_pallas, mac_chain_netlist_fn
 
@@ -108,6 +118,11 @@ def hobflops_matmul(i_f32, w_f32=None, *, fmt: FPFormat,
         w_planes = _pad_to(_pad_to(w_planes, c_block, 0), m_block, 2)
     if backend == "pallas":
         out = bitslice_mac_pallas(
+            i_masks, w_planes, fmt=fmt, extended=extended,
+            rounding=rounding, p_block=p_block, m_block=m_block,
+            c_block=c_block, c_unroll=c_unroll, interpret=interpret)
+    elif backend == "pallas_fused":
+        out = fused_mac_pallas(
             i_masks, w_planes, fmt=fmt, extended=extended,
             rounding=rounding, p_block=p_block, m_block=m_block,
             c_block=c_block, c_unroll=c_unroll, interpret=interpret)

@@ -37,6 +37,7 @@ from repro.core import softfloat as sf
 from repro.core.bitslice import (BitsliceActivation, pack_planes,
                                  unpack_planes, window_gather_planes)
 from repro.core.fpformat import EXC_INF, RNE, FPFormat
+from repro.core.pallas_backend import fused_mac_pallas
 from repro.kernels.bitslice_mac.kernel import (add_netlist_fn,
                                                bitslice_mac_pallas,
                                                cast_netlist_fn,
@@ -397,12 +398,19 @@ def conv_core(act: BitsliceActivation, weights: ConvWeights, *,
         out = bitslice_mac_pallas(i_masks, w_planes, fmt=weights.fmt,
                                   extended=extended, rounding=rounding,
                                   interpret=interpret, **blk)
+    elif backend == "pallas_fused":
+        # The fused backend absorbs the ReLU epilogue into the kernel
+        # (two in-kernel ops on the final C step) — no post-hoc
+        # hobflops_relu_planes pass, the whole layer is one pallas_call.
+        out = fused_mac_pallas(i_masks, w_planes, fmt=weights.fmt,
+                               extended=extended, rounding=rounding,
+                               relu=relu, interpret=interpret, **blk)
     else:
         out = _bitslice_mac_jnp(i_masks, w_planes, fmt=weights.fmt,
                                 extended=extended, rounding=rounding,
                                 c_unroll=blk["c_unroll"])
     fmt_out = weights.fmt.mult_out(extended)
-    if relu:
+    if relu and backend != "pallas_fused":
         out = hobflops_relu_planes(out, fmt_out)
     return BitsliceActivation(out, fmt_out, (B, Ho, Wo, M))
 
@@ -450,6 +458,20 @@ _LAUNCH_ERRORS = (ValueError, TypeError, AssertionError,
                   NotImplementedError, IndexError, RuntimeError)
 
 
+def default_tune_candidates(backend: str = "jnp") -> list[dict]:
+    """Backend-aware candidate set for :func:`tune_conv_blocks`.
+
+    The gate-interpreter backends sweep the full c_unroll x m_block
+    cross.  The fused backend drops ``c_unroll=8``: its win comes from
+    the single-kernel emission rather than chain depth, wide formats
+    are clamped to ``k=1`` anyway (``fused_chain_k``), and every extra
+    chain depth is another multi-minute XLA compile in the sweep.
+    """
+    unrolls = (1, 2, 4) if backend == "pallas_fused" else (1, 2, 4, 8)
+    return [{"c_unroll": u, "m_block": m}
+            for u in unrolls for m in (8, 32, 128)]
+
+
 def tune_conv_blocks(images, kernels, *, fmt: FPFormat,
                      backend: str = "jnp", interpret: bool = False,
                      candidates=None, iters: int = 2, **conv_kw):
@@ -467,8 +489,7 @@ def tune_conv_blocks(images, kernels, *, fmt: FPFormat,
     failing candidate dict and its error.
     """
     if candidates is None:
-        candidates = [{"c_unroll": u, "m_block": m}
-                      for u in (1, 2, 4, 8) for m in (8, 32, 128)]
+        candidates = default_tune_candidates(backend)
     if isinstance(kernels, ConvWeights):
         khh, kww, C, M = (kernels.kh, kernels.kw, kernels.cin,
                           kernels.cout)

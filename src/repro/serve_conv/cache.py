@@ -216,6 +216,13 @@ def tuned_conv_blocks(images, kernels, *, fmt, backend: str = "jnp",
     Returns ``(blocks, seconds_per_call_or_None)`` — the timing is None
     on a hit (it was measured on some earlier process/machine and is
     kept only as a provenance hint in the file).
+
+    Entries are versioned with the backend they were tuned for.  A
+    winner tuned for the gate-interpreter backend is not a winner for
+    the fused kernel, so an entry written before backends were tagged
+    (or hand-seeded without a tag) is treated as *stale*: it is never
+    reused silently — a warning names the entry and the sweep re-runs,
+    overwriting it with a tagged winner.
     """
     key = tune_key(images.shape, kernels, fmt, backend=backend,
                    candidates=tune_kw.get("candidates"),
@@ -223,10 +230,19 @@ def tuned_conv_blocks(images, kernels, *, fmt, backend: str = "jnp",
                       if k in ("stride", "padding", "extended")})
     hit = load_tune_cache(path).get(key)
     if hit is not None:
-        return dict(hit["blocks"]), None
+        if hit.get("backend") == backend:
+            return dict(hit["blocks"]), None
+        tag = ("untagged (pre-backend-versioning)"
+               if "backend" not in hit
+               else f"tuned for backend {hit['backend']!r}")
+        warnings.warn(
+            f"tune cache entry for this problem is stale — {tag}, but "
+            f"backend {backend!r} was requested; retuning instead of "
+            f"reusing it (the fresh winner replaces the entry)",
+            RuntimeWarning, stacklevel=2)
     best, results = tune_conv_blocks(images, kernels, fmt=fmt,
                                      backend=backend, **tune_kw)
-    save_tune_cache({key: {"blocks": best,
+    save_tune_cache({key: {"blocks": best, "backend": backend,
                            "seconds_per_call": min(results.values())}},
                     path)
     return best, min(results.values())

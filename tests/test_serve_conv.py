@@ -207,13 +207,40 @@ def test_tune_cache_seeded_is_honored(tmp_path, monkeypatch):
     key = tune_key(img.shape, kern, F8)
     seeded = {"p_block": 8, "m_block": 32, "c_block": 36, "c_unroll": 2}
     with open(path, "w") as f:
-        json.dump({key: {"blocks": seeded, "seconds_per_call": 1.0}}, f)
+        json.dump({key: {"blocks": seeded, "backend": "jnp",
+                         "seconds_per_call": 1.0}}, f)
 
     def boom(*a, **k):                            # pragma: no cover
         raise AssertionError("sweep ran despite a seeded cache")
     monkeypatch.setattr("repro.serve_conv.cache.tune_conv_blocks", boom)
     blocks, dt = tuned_conv_blocks(img, kern, fmt=F8, path=path)
     assert blocks == seeded and dt is None
+
+
+def test_tune_cache_stale_backend_warns_and_retunes(tmp_path):
+    """An entry without a backend tag (pre-versioning file, or a
+    hand-seeded one) is stale: it is never reused silently — a warning
+    fires, the sweep re-runs, and the fresh tagged winner replaces the
+    entry."""
+    rng = np.random.default_rng(8)
+    img = _rand(rng, (1, 6, 6, 4))
+    kern = _rand(rng, (1, 1, 4, 8), 0.3)
+    path = str(tmp_path / "tune.json")
+    cands = [{"c_unroll": 1, "m_block": 8}]
+    key = tune_key(img.shape, kern, F8, candidates=cands)
+    stale = {"p_block": 1, "m_block": 1, "c_block": 1, "c_unroll": 1}
+    with open(path, "w") as f:
+        json.dump({key: {"blocks": stale, "seconds_per_call": 1.0}}, f)
+    with pytest.warns(RuntimeWarning, match="stale"):
+        blocks, dt = tuned_conv_blocks(img, kern, fmt=F8, path=path,
+                                       iters=1, candidates=cands)
+    assert dt is not None                     # the sweep actually ran
+    entry = json.load(open(path))[key]
+    assert entry["backend"] == "jnp"          # replaced, now tagged
+    # tagged entry is honored again on the next call
+    blocks2, dt2 = tuned_conv_blocks(img, kern, fmt=F8, path=path,
+                                     candidates=cands)
+    assert blocks2 == blocks and dt2 is None
 
 
 def test_tune_cache_miss_runs_and_persists(tmp_path):
